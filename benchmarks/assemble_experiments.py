@@ -1,0 +1,87 @@
+"""Assemble EXPERIMENTS.md: inject the generated dry-run/roofline tables
+at the <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE --> markers.
+
+PYTHONPATH=src python -m benchmarks.assemble_experiments
+"""
+import glob
+import io
+import json
+import os
+import subprocess
+import sys
+
+
+def render(dir_: str) -> dict:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+
+    dry = io.StringIO()
+    n_pod2 = sum(1 for r in ok if r["mesh"] == "2x16x16")
+    n_pod2_skip = sum(1 for r in skipped if r.get("multi_pod"))
+    print(f"Compiled cells: **{len(ok)}** ok "
+          f"({len(ok) - n_pod2} single-pod, {n_pod2} multi-pod), "
+          f"{len(skipped)} skipped per assignment rules "
+          f"({len(skipped) - n_pod2_skip} single-pod, {n_pod2_skip} multi-pod), "
+          f"{len(errors)} errors.\n", file=dry)
+    print("| arch | cell | mesh | peak GB/dev | compile s | collective schedule |", file=dry)
+    print("|---|---|---|---|---|---|", file=dry)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        cols = ", ".join(f"{k}×{v}" for k, v in sorted(r.get("collectives", {}).items()))
+        mem = r.get("memory_stats", {})
+        print(f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+              f"| {mem.get('peak_gb', 0):.1f} | {r.get('compile_s', '')} | {cols} |",
+              file=dry)
+
+    roof = io.StringIO()
+    print("| arch | cell | compute s | memory s | collective s | dominant | "
+          "useful ratio | what would move the dominant term |", file=roof)
+    print("|---|---|---|---|---|---|---|---|", file=roof)
+    hints = {
+        ("memory", "train"): "remat policy + SP residual (see P4: −62% on qwen)",
+        ("memory", "prefill"): "bf16 intermediate chains; flash-attn kernel on TPU",
+        ("collective", "train"): "seq-sharded activations / k-local MoE combine",
+        ("collective", "decode"): "batch the decode步 across requests; kv_seq sharding already flash-decode",
+        ("collective", "prefill"): "overlap TP collectives with compute (latency-hiding scheduler)",
+        ("compute", "train"): "block-sparse kernels after pruning (paper technique)",
+    }
+    from repro.configs import SHAPES
+
+    for r in sorted(ok, key=lambda r: (r["arch"], r["cell"])):
+        if r["mesh"] != "16x16":
+            continue
+        kind = SHAPES[r["cell"]].kind
+        hint = hints.get((r["dominant"], kind), "—")
+        print(f"| {r['arch']} | {r['cell']} | {r['compute_s']:.2e} "
+              f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+              f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {hint} |",
+              file=roof)
+
+    skip = io.StringIO()
+    seen = set()
+    for r in skipped:
+        key = (r["arch"], r["cell"])
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"- {r['arch']} × {r['cell']}: {r['reason']}", file=skip)
+    return {"dry": dry.getvalue(), "roof": roof.getvalue() + "\nSkipped:\n" + skip.getvalue()}
+
+
+def main():
+    parts = render("results/dryrun")
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", parts["dry"], 1)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", parts["roof"], 1)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md assembled")
+
+
+if __name__ == "__main__":
+    main()

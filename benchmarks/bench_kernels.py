@@ -1,0 +1,63 @@
+"""BSR kernel benchmark: wall-time vs density (interpret mode on CPU is a
+correctness proxy; the structural claim — compute and DMA bytes scale with
+density — is derived from the kernel's grid/BlockSpec and reported as the
+modeled roofline deltas)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BlockingSpec, pack_bsr
+from repro.core.resource_model import TPU_V5E
+from repro.kernels import ref
+from repro.kernels.block_sparse_matmul import bsr_matmul_pallas
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def main(quick: bool = False) -> List[str]:
+    rng = np.random.default_rng(0)
+    m, k, n, bk, bn = (256, 1024, 1024, 128, 128)
+    out = []
+    for density in ([1.0, 0.5, 0.25] if not quick else [0.5]):
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        gk, gn = k // bk, n // bn
+        alive = rng.uniform(size=(gk, gn)) < density
+        mask = np.repeat(np.repeat(alive, bk, 0), bn, 1).astype(np.float32)
+        bsr = pack_bsr(w, BlockingSpec(bk=bk, bn=bn), mask=mask)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+
+        pl_fn = jax.jit(lambda xx: bsr_matmul_pallas(
+            xx, bsr.indices, bsr.blocks, n=n, bm=128, interpret=True))
+        ref_fn = jax.jit(lambda xx: ref.bsr_matmul_ref(xx, bsr))
+        t_pl = _time(pl_fn, x)
+        t_ref = _time(ref_fn, x)
+
+        # modeled TPU roofline for the kernel at this density
+        flops = 2 * m * k * n * bsr.density()
+        bytes_w = bsr.nnz_blocks * bk * bn * 4
+        compute_us = flops / TPU_V5E.peak_flops_bf16 * 1e6
+        hbm_us = bytes_w / TPU_V5E.hbm_bw * 1e6
+        out.append(
+            f"bsr_matmul_d{density:.2f},{t_pl*1e6:.0f},"
+            f"interp_vs_ref={t_pl/t_ref:.1f}x modeled_tpu_us="
+            f"{max(compute_us, hbm_us):.2f} (compute {compute_us:.2f} / "
+            f"hbm {hbm_us:.2f}) density={bsr.density():.2f}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

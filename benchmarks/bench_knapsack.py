@@ -1,0 +1,57 @@
+"""Knapsack solver benchmark: quality (vs exact) and scaling to the
+structure counts of the assigned LMs (1e5-1e6 items)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import solve_brute, solve_mdkp
+
+
+def main(quick: bool = False) -> List[str]:
+    rng = np.random.default_rng(0)
+    out = []
+
+    # quality vs brute force on adversarial small instances
+    worst = 1.0
+    trials = 100 if quick else 400
+    for t in range(trials):
+        n = rng.integers(2, 13)
+        m = rng.integers(1, 4)
+        v = rng.uniform(0, 1, n)
+        w = rng.uniform(0.01, 1, (m, n))
+        c = w.sum(axis=1) * rng.uniform(0.1, 0.9)
+        b = solve_brute(v, w, c)
+        a = solve_mdkp(v, w, c)
+        if b.value > 1e-12:
+            worst = min(worst, a.value / b.value)
+    out.append(f"knapsack_quality_small,{trials},worst_ratio_vs_exact={worst:.4f}")
+
+    # scaling
+    for n in ([50_000] if quick else [50_000, 200_000]):
+        v = rng.uniform(0, 1, n)
+        w = rng.uniform(0.5, 2.0, (2, n))
+        c = w.sum(axis=1) * 0.5
+        t0 = time.time()
+        r = solve_mdkp(v, w, c)
+        dt = time.time() - t0
+        assert np.all(r.used <= c + 1e-6)
+        out.append(f"knapsack_scale_n{n},{dt*1e6:.0f},value={r.value:.0f} "
+                   f"feasible=True method={r.method}")
+
+    # homogeneous fast path (the common per-layer case)
+    n = 500_000
+    v = rng.uniform(0, 1, n)
+    w = np.ones((2, n))
+    t0 = time.time()
+    r = solve_mdkp(v, w, np.array([n * 0.3, n * 0.3]))
+    dt = time.time() - t0
+    out.append(f"knapsack_topk_n{n},{dt*1e6:.0f},method={r.method}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

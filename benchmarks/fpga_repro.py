@@ -1,0 +1,138 @@
+"""Shared machinery for reproducing the paper's FPGA tables.
+
+The paper's DSP group = RF consecutive weights of the transposed-flattened
+matrix = a (bk=RF, bn=1) block of our (in, out) kernels.  BRAM-aware
+(multi-dimensional) structures = C consecutive DSP groups = (bk=RF*C, bn=1).
+Resource vectors use the paper's own units via
+``TPUResourceModel.fpga_dsp_bram`` (DSP blocks, BRAM36 blocks), so the
+reported reductions are directly comparable with Tables II/III/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BlockingSpec,
+    IterativePruner,
+    PruneConfig,
+    TPUResourceModel,
+    apply_masks,
+    build_structures,
+    constant_step,
+    init_masks,
+)
+from repro.core.resource_model import HardwareSpec
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class FpgaResourceModel(TPUResourceModel):
+    """Resource vectors in the paper's FPGA units for one layer."""
+
+    rf: int = 1
+    precision_bits: int = 16
+    fpga_strategy: str = "resource"
+    multi_dim: bool = False
+
+    def structure_cost(self, blocking) -> np.ndarray:
+        dsp, bram = TPUResourceModel.fpga_dsp_bram(
+            self.precision_bits, self.rf, self.fpga_strategy
+        )
+        if self.multi_dim:
+            # one structure = C consecutive DSP groups = C DSPs, 1 BRAM
+            c = max(blocking.bk // self.rf, 1)
+            return np.array([dsp * c, 1.0 if self.fpga_strategy == "resource" else 0.0])
+        return np.array([dsp, bram])
+
+
+def bram_c(precision_bits: int) -> int:
+    """Paper Eq. 1 with the 36-bit BRAM word."""
+    if 36 % precision_bits == 0:
+        return 36 // precision_bits
+    return int(np.ceil(2 * 36 / precision_bits))
+
+
+def train_classifier(params, masks, forward, batch_fn, steps, lr=5e-3,
+                     reg=None, seed0=0):
+    opt_cfg = AdamWConfig(use_master=False, weight_decay=0.0)
+    opt = init_opt_state(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits = forward(apply_masks(p, masks), x)
+            onehot = jax.nn.one_hot(y, logits.shape[-1])
+            loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+            if reg is not None:
+                loss = loss + reg(p)
+            return loss
+
+        grads = jax.grad(loss_fn)(params)
+        return adamw_update(params, grads, opt, opt_cfg, jnp.asarray(lr), masks=masks)
+
+    for s in range(steps):
+        x, y = batch_fn(seed0 + s)
+        params, opt = step(params, opt, x, y)
+    return params
+
+
+def accuracy(params, masks, forward, batch) -> float:
+    x, y = batch
+    logits = forward(apply_masks(params, masks), x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+
+
+def run_prune_experiment(
+    *,
+    init_fn,
+    forward,
+    batch_fn,
+    val_batch,
+    blocking_per_layer: Dict[str, BlockingSpec],
+    models_per_layer,
+    target=(0.75, 0.75),
+    step_size=0.25,
+    pretrain_steps=150,
+    finetune_steps=40,
+    tolerance=0.04,
+    min_size=64,
+    seed=0,
+) -> Dict:
+    """Full Algorithm-2 run; returns paper-style reductions + accuracies."""
+    params = init_fn(jax.random.PRNGKey(seed))
+    structures = build_structures(params, blocking_per_layer, min_size=min_size)
+    masks0 = init_masks(params, structures)
+    params = train_classifier(params, masks0, forward, batch_fn, pretrain_steps)
+    base_acc = accuracy(params, masks0, forward, val_batch)
+
+    pruner = IterativePruner(
+        structures, models_per_layer,
+        PruneConfig(schedule=constant_step(list(target), step_size),
+                    tolerance=tolerance),
+    )
+    t0 = time.time()
+    params, masks, logs = pruner.run(
+        params,
+        lambda p, m: train_classifier(p, m, forward, batch_fn, finetune_steps,
+                                      lr=2e-3, seed0=10_000),
+        lambda p, m: accuracy(p, m, forward, val_batch),
+    )
+    dt = time.time() - t0
+    final = logs[-1] if logs else None
+    red = final.reduction() if final else np.array([1.0, 1.0])
+    return {
+        "baseline_acc": base_acc,
+        "pruned_acc": accuracy(params, masks, forward, val_batch),
+        "dsp_reduction": float(red[0]),
+        "bram_reduction": float(red[1]) if np.isfinite(red[1]) else float("inf"),
+        "structure_sparsity": final.structure_sparsity if final else 0.0,
+        "iterations": len(logs),
+        "seconds": dt,
+        "baseline_resources": (pruner.baseline_resources.tolist()),
+    }

@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+Writes markdown to stdout (tee into EXPERIMENTS.md sections).
+"""
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    return f"{x:.2e}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+
+    print("## Dry-run summary\n")
+    print(f"- compiled cells: {len(ok)}   skipped (per assignment): "
+          f"{len(skipped)}   errors: {len(errors)}\n")
+    if errors:
+        for r in errors:
+            print(f"- ERROR {r['arch']} {r['cell']} pod={r.get('multi_pod')}: "
+                  f"{str(r.get('error'))[:160]}")
+        print()
+
+    print("| arch | cell | mesh | peak GB/dev | args GB/dev | compile s | collectives |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        cols = ", ".join(f"{k}:{v}" for k, v in sorted(r.get("collectives", {}).items()))
+        mem = r.get("memory_stats", {})
+        print(f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+              f"| {mem.get('peak_gb', 0):.2f} | {mem.get('argument_gb', 0):.2f} "
+              f"| {r.get('compile_s', '')} | {cols} |")
+
+    print("\n## Roofline (single-pod 16x16, per-step seconds)\n")
+    print("| arch | cell | compute s | memory s | collective s | dominant | "
+          "useful FLOP ratio | MODEL_FLOPS |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["cell"])):
+        if r["mesh"] != "16x16":
+            continue
+        print(f"| {r['arch']} | {r['cell']} | {fmt_s(r['compute_s'])} "
+              f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+              f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+              f"| {fmt_s(r['model_flops_total'])} |")
+
+    if skipped:
+        print("\n### Skipped cells (assignment rules)\n")
+        for r in skipped:
+            print(f"- {r['arch']} x {r['cell']}: {r['reason']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

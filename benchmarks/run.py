@@ -1,0 +1,45 @@
+"""Benchmark harness: one entry per paper table + solver/kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` (or QUICK=1) trims
+sweeps for CI-speed runs; the full run reproduces every table.
+"""
+import argparse
+import os
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    default=os.environ.get("QUICK") == "1")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table3,table5,kernels,knapsack")
+    args, _ = ap.parse_known_args()
+
+    from . import bench_kernels, bench_knapsack, table2_jets, table3_svhn, table5_lenet
+
+    benches = {
+        "knapsack": bench_knapsack.main,
+        "kernels": bench_kernels.main,
+        "table2": table2_jets.main,
+        "table3": table3_svhn.main,
+        "table5": table5_lenet.main,
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            for line in benches[name](quick=args.quick):
+                print(line, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED: {traceback.format_exc().splitlines()[-1]}",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

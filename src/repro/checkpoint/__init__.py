@@ -1,0 +1,4 @@
+"""Atomic / async / elastic checkpointing."""
+from .checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,163 @@
+"""Checkpointing: atomic, async-capable, elastic-restorable.
+
+Layout per step::
+
+    <dir>/step_<n>.tmp/            (write in progress)
+    <dir>/step_<n>/
+        meta.msgpack               tree structure, shapes, dtypes, step
+        leaf_00000.npy ...         one file per pytree leaf (host np arrays)
+        COMMITTED                  commit marker (written last)
+
+Fault-tolerance contract:
+* writes go to a ``.tmp`` dir, the commit marker is written, then the dir
+  is atomically renamed — a crash mid-save never corrupts the latest
+  checkpoint and ``latest_step`` only ever returns committed steps;
+* ``restore`` can re-device_put onto a *different* mesh/shardings than the
+  save used (elastic scaling): arrays are saved as full logical values;
+* ``save_async`` snapshots to host then writes on a worker thread so the
+  training loop is blocked only for the device->host copy;
+* ``keep`` bounds disk usage (oldest committed steps pruned).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths, leaves = [], []
+    for kp, leaf in flat:
+        paths.append(jax.tree_util.keystr(kp))
+        leaves.append(leaf)
+    return paths, leaves
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- inspection ----------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def committed_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(full, "COMMITTED")):
+                    steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, blocking: bool = True) -> None:
+        paths, leaves = _flatten_with_paths(state)
+        # device->host snapshot (the only part that must block the step loop)
+        host_leaves = [np.asarray(l) for l in leaves]
+        treedef = jax.tree.structure(state)
+
+        def write():
+            tmp = self._step_dir(step) + ".tmp"
+            final = self._step_dir(step)
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            meta = {
+                "step": step,
+                "paths": paths,
+                "shapes": [list(h.shape) for h in host_leaves],
+                "dtypes": [str(h.dtype) for h in host_leaves],
+                "treedef": str(treedef),
+            }
+            for i, h in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), h, allow_pickle=False)
+            with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+                f.write(msgpack.packb(meta))
+            with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()  # one in-flight save at a time
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def save_async(self, step: int, state: Any) -> None:
+        self.save(step, state, blocking=False)
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = self.committed_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def restore(
+        self,
+        step: Optional[int] = None,
+        *,
+        target: Any = None,
+        shardings: Any = None,
+    ) -> Any:
+        """Load a committed checkpoint.
+
+        ``target``: pytree prototype whose structure the leaves are
+        unflattened into (required — treedefs are not unpickled from disk
+        for safety).  ``shardings``: optional matching pytree of
+        NamedShardings for elastic placement on the current mesh."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        if not os.path.exists(os.path.join(d, "COMMITTED")):
+            raise FileNotFoundError(f"checkpoint step {step} not committed")
+        with open(os.path.join(d, "meta.msgpack"), "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        host = [
+            np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            for i in range(len(meta["paths"]))
+        ]
+        if target is None:
+            return {"step": meta["step"], "leaves": host, "paths": meta["paths"]}
+        treedef = jax.tree.structure(target)
+        if treedef.num_leaves != len(host):
+            raise ValueError(
+                f"target has {treedef.num_leaves} leaves, checkpoint {len(host)}"
+            )
+        if shardings is not None:
+            flat_s = treedef.flatten_up_to(shardings)
+            host = [
+                jax.device_put(h, s) if s is not None else jax.device_put(h)
+                for h, s in zip(host, flat_s)
+            ]
+        else:
+            host = [jax.device_put(h) for h in host]
+        return jax.tree.unflatten(treedef, host)

@@ -1,0 +1,49 @@
+"""repro.core — FPGA resource-aware structured pruning, TPU-native.
+
+The paper's contribution as a composable JAX library:
+
+* structures       resource-aware tensor structures (RF/C -> MXU tiles)
+* resource_model   vector resource estimation R(w) (DSP/BRAM -> MXU/HBM)
+* knapsack         MDKP solvers (Eq. 5-8)
+* masks            mask pytrees + sparsity accounting
+* regularizer      resource-aware group lasso
+* schedule         sparsity schedules f(s)
+* pruner           Algorithm 2 iterative loop
+* packing          BSR packing for the zero-skipping serving path (§III-C)
+"""
+from .knapsack import KnapsackResult, solve_brute, solve_dp, solve_greedy, solve_mdkp
+from .masks import (
+    apply_masks,
+    build_structures,
+    count_zero_structures,
+    init_masks,
+    masks_from_knapsack,
+    sparsity_report,
+)
+from .packing import BSRWeight, bsr_to_dense, pack_bsr
+from .pruner import IterativePruner, PruneConfig, PruneIterationLog
+from .regularizer import group_lasso, make_regularizer
+from .resource_model import TPU_V5E, HardwareSpec, TPUResourceModel, consecutive_groups
+from .schedule import SparsitySchedule, constant_step, cubic
+from .structures import (
+    BlockingSpec,
+    LayerStructures,
+    StructureInfo,
+    block_partition,
+    iter_prunable,
+    mask_from_selection,
+    structure_norms_dense,
+)
+
+__all__ = [
+    "KnapsackResult", "solve_brute", "solve_dp", "solve_greedy", "solve_mdkp",
+    "apply_masks", "build_structures", "count_zero_structures", "init_masks",
+    "masks_from_knapsack", "sparsity_report",
+    "BSRWeight", "bsr_to_dense", "pack_bsr",
+    "IterativePruner", "PruneConfig", "PruneIterationLog",
+    "group_lasso", "make_regularizer",
+    "TPU_V5E", "HardwareSpec", "TPUResourceModel", "consecutive_groups",
+    "SparsitySchedule", "constant_step", "cubic",
+    "BlockingSpec", "LayerStructures", "StructureInfo", "block_partition",
+    "iter_prunable", "mask_from_selection", "structure_norms_dense",
+]

@@ -1,0 +1,158 @@
+"""Mask pytrees: creation, application, and sparsity accounting.
+
+Masks mirror the params pytree: prunable leaves get a {0,1} float mask of
+the same shape, non-prunable leaves get ``None``.  Applying a mask is a
+pure element-wise multiply so it is free to fuse into the matmul producer
+under jit; the serving path instead *packs* masked weights to BSR
+(``core/packing.py``) so pruned tiles are skipped outright.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .structures import (
+    BlockingSpec,
+    LayerStructures,
+    StructureInfo,
+    block_partition,
+    iter_prunable,
+    mask_from_selection,
+)
+
+__all__ = [
+    "build_structures",
+    "init_masks",
+    "apply_masks",
+    "masks_from_knapsack",
+    "sparsity_report",
+    "count_zero_structures",
+]
+
+
+def build_structures(
+    params: Mapping[str, Any],
+    blocking: BlockingSpec | Mapping[str, BlockingSpec],
+    **iter_kwargs,
+) -> LayerStructures:
+    """Partition every prunable weight into resource-aware structures.
+
+    ``blocking`` may be a single spec or a per-path override mapping with a
+    ``"default"`` entry (the paper's heterogeneous per-layer RF/strategy,
+    Table IV).
+    """
+    infos = []
+    for path, w in iter_prunable(params, **iter_kwargs):
+        if isinstance(blocking, BlockingSpec):
+            spec = blocking
+        else:
+            spec = blocking.get(path, blocking.get("default"))
+            if spec is None:
+                raise KeyError(f"no blocking spec for {path} and no default")
+        infos.append(block_partition(path, w.shape, spec))
+    return LayerStructures(infos=infos)
+
+
+def _get_path(tree: Mapping[str, Any], path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[int(part)] if isinstance(node, (list, tuple)) else node[part]
+    return node
+
+
+def _set_path(tree: Dict[str, Any], path: str, value) -> None:
+    parts = path.split("/")
+    node = tree
+    for part in parts[:-1]:
+        node = node[int(part)] if isinstance(node, (list, tuple)) else node[part]
+    last = parts[-1]
+    if isinstance(node, list):
+        node[int(last)] = value
+    else:
+        node[last] = value
+
+
+def init_masks(params: Mapping[str, Any], structures: LayerStructures) -> Dict[str, Any]:
+    """All-ones masks (sparsity 0) shaped like the prunable leaves."""
+    masks = jax.tree.map(lambda _: None, dict(params))
+    for info in structures.infos:
+        w = _get_path(params, info.path)
+        _set_path(masks, info.path, jnp.ones(w.shape, dtype=w.dtype))
+    return masks
+
+
+def apply_masks(params: Mapping[str, Any], masks: Optional[Mapping[str, Any]]):
+    """Elementwise params * mask where a mask exists."""
+    if masks is None:
+        return params
+    return jax.tree.map(
+        lambda p, m: p if m is None else p * m.astype(p.dtype),
+        dict(params),
+        dict(masks),
+        is_leaf=lambda x: x is None,
+    )
+
+
+def masks_from_knapsack(
+    params: Mapping[str, Any],
+    structures: LayerStructures,
+    selection: np.ndarray,
+) -> Dict[str, Any]:
+    """Expand a global knapsack selection vector into a mask pytree."""
+    offsets = structures.layer_offsets()
+    masks = jax.tree.map(lambda _: None, dict(params))
+    for li, info in enumerate(structures.infos):
+        sel = selection[offsets[li]: offsets[li + 1]]
+        w = _get_path(params, info.path)
+        m = mask_from_selection(sel, info)
+        _set_path(masks, info.path, jnp.asarray(m, dtype=w.dtype))
+    return masks
+
+
+def count_zero_structures(masks: Mapping[str, Any], structures: LayerStructures) -> Tuple[int, int]:
+    """(pruned, total) structure counts implied by a mask pytree."""
+    pruned = 0
+    total = structures.total_structures
+    for info in structures.infos:
+        m = np.asarray(_get_path(masks, info.path))
+        sel = _selection_from_mask(m, info)
+        pruned += int(np.sum(sel == 0))
+    return pruned, total
+
+
+def _selection_from_mask(mask: np.ndarray, info: StructureInfo) -> np.ndarray:
+    planes = info.planes
+    k = info.shape[-2] if len(info.shape) >= 2 else 1
+    n = info.shape[-1]
+    m2 = mask.reshape(planes, k, n)
+    bk, bn = info.blocking.bk, info.blocking.bn
+    pk, pn = info.grid_k * bk - k, info.grid_n * bn - n
+    if pk or pn:
+        m2 = np.pad(m2, [(0, 0), (0, pk), (0, pn)])
+    m4 = m2.reshape(planes, info.grid_k, bk, info.grid_n, bn)
+    return (np.abs(m4).sum(axis=(2, 4)) > 0).astype(np.int8).reshape(-1)
+
+
+def sparsity_report(
+    params: Mapping[str, Any],
+    masks: Mapping[str, Any],
+    structures: LayerStructures,
+) -> Dict[str, float]:
+    """Weight- and structure-level sparsity, global and per-layer."""
+    report: Dict[str, float] = {}
+    zeros = 0
+    total = 0
+    for info in structures.infos:
+        m = np.asarray(_get_path(masks, info.path))
+        z = int(np.sum(m == 0))
+        t = int(m.size)
+        report[f"layer/{info.path}"] = z / max(t, 1)
+        zeros += z
+        total += t
+    report["weight_sparsity"] = zeros / max(total, 1)
+    p, t = count_zero_structures(masks, structures)
+    report["structure_sparsity"] = p / max(t, 1)
+    return report

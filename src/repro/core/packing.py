@@ -1,0 +1,126 @@
+"""Dense+mask -> BSR packing (the paper's §III-C codegen, TPU edition).
+
+The paper emits HLS that skips multiplications by pruned structures — the
+compiler alone will not.  The TPU equivalent: pack surviving (bk, bn) tiles
+into a block-compressed (BSR-like) layout and run the Pallas kernel in
+``kernels/block_sparse_matmul.py``, which iterates only over surviving
+tiles (scalar-prefetched indices choose the HBM->VMEM DMAs).
+
+Layout: for each block-column j (output tile), the K-block indices of its
+surviving tiles, padded to the column max with -1:
+
+    indices: (grid_n, max_nnz) int32   (-1 = padding slot)
+    blocks:  (grid_n, max_nnz, bk, bn) weight dtype  (zeros in padding)
+
+Column-major-by-output grouping matches the matmul loop: an output tile
+accumulates over its own column's surviving tiles only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .structures import BlockingSpec
+
+__all__ = ["BSRWeight", "pack_bsr", "bsr_to_dense"]
+
+
+@dataclasses.dataclass
+class BSRWeight:
+    """Block-sparse weight for a (K, N) matmul, tiles of (bk, bn)."""
+
+    indices: jnp.ndarray      # (grid_n, max_nnz) int32, -1 padded
+    blocks: jnp.ndarray       # (grid_n, max_nnz, bk, bn)
+    shape: Tuple[int, int]    # dense (K, N)
+    blocking: BlockingSpec
+
+    @property
+    def grid_k(self) -> int:
+        return -(-self.shape[0] // self.blocking.bk)
+
+    @property
+    def grid_n(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def max_nnz(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(jnp.sum(self.indices >= 0))
+
+    def density(self) -> float:
+        return self.nnz_blocks / max(self.grid_k * self.grid_n, 1)
+
+    def tree_flatten(self):
+        return (self.indices, self.blocks), (self.shape, self.blocking)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indices, blocks = children
+        shape, blocking = aux
+        return cls(indices=indices, blocks=blocks, shape=shape, blocking=blocking)
+
+
+jax.tree_util.register_pytree_node(
+    BSRWeight, BSRWeight.tree_flatten, BSRWeight.tree_unflatten
+)
+
+
+def pack_bsr(
+    weight: np.ndarray,
+    blocking: BlockingSpec,
+    mask: Optional[np.ndarray] = None,
+    *,
+    min_slots: int = 1,
+) -> BSRWeight:
+    """Pack a masked dense (K, N) weight into BSR. Host-side (numpy)."""
+    w = np.asarray(weight)
+    if w.ndim != 2:
+        raise ValueError(f"pack_bsr expects 2-D weights, got {w.shape}")
+    if mask is not None:
+        w = w * np.asarray(mask, dtype=w.dtype)
+    k, n = w.shape
+    bk, bn = min(blocking.bk, k), min(blocking.bn, n)
+    gk, gn = -(-k // bk), -(-n // bn)
+    wp = np.zeros((gk * bk, gn * bn), dtype=w.dtype)
+    wp[:k, :n] = w
+    tiles = wp.reshape(gk, bk, gn, bn).transpose(0, 2, 1, 3)  # (gk, gn, bk, bn)
+    alive = np.abs(tiles).sum(axis=(2, 3)) > 0                # (gk, gn)
+
+    max_nnz = max(int(alive.sum(axis=0).max(initial=0)), min_slots)
+    indices = np.full((gn, max_nnz), -1, dtype=np.int32)
+    blocks = np.zeros((gn, max_nnz, bk, bn), dtype=w.dtype)
+    for j in range(gn):
+        rows = np.flatnonzero(alive[:, j])
+        indices[j, : rows.size] = rows
+        blocks[j, : rows.size] = tiles[rows, j]
+
+    eff = BlockingSpec(bk=bk, bn=bn, consecutive=blocking.consecutive)
+    return BSRWeight(
+        indices=jnp.asarray(indices),
+        blocks=jnp.asarray(blocks),
+        shape=(k, n),
+        blocking=eff,
+    )
+
+
+def bsr_to_dense(bsr: BSRWeight) -> jnp.ndarray:
+    """Reconstruct the dense (K, N) weight — oracle for tests (traceable)."""
+    bk, bn = bsr.blocking.bk, bsr.blocking.bn
+    gk, gn = bsr.grid_k, bsr.grid_n
+    dense = jnp.zeros((gk * bk, gn * bn), dtype=bsr.blocks.dtype)
+    for j in range(gn):
+        for s in range(bsr.max_nnz):
+            i = bsr.indices[j, s]
+            safe = jnp.maximum(i, 0)
+            cur = jax.lax.dynamic_slice(dense, (safe * bk, j * bn), (bk, bn))
+            new = jnp.where(i >= 0, bsr.blocks[j, s], cur)
+            dense = jax.lax.dynamic_update_slice(
+                dense, new.astype(dense.dtype), (safe * bk, j * bn))
+    return dense[: bsr.shape[0], : bsr.shape[1]]

@@ -1,0 +1,159 @@
+"""TPU resource-estimation function R(w) (paper §III-B, Eq. 1 adapted).
+
+The paper's ``R: R^k -> R^m`` maps a resource-aware structure to its vector
+of hardware costs — there, (DSP blocks, BRAM blocks).  Here the two modeled
+resources are:
+
+* ``mxu``  — MXU tile-passes per activation row-block: how many 128x128
+  systolic passes the structure's weights occupy.  A (bk, bn) tile costs
+  ``(bk/128)·(bn/128)`` passes (fractional for sub-tile blocks — they still
+  occupy a full lane/sublane slot, so we ceil at the *register* granularity
+  (8, 128), mirroring how a half-used DSP is still a DSP).
+* ``hbm``  — HBM streaming pages: bytes the structure occupies on the
+  HBM->VMEM path, in units of ``dma_page_bytes``.  Shared pages mean a
+  structure only frees a page when all ``C`` tiles of the super-block are
+  pruned — the paper's Eq. 1 consecutive-group condition.
+
+Eq. 1 analogue::
+
+    C = page/Bt           if page ≡ 0 (mod Bt)
+        ceil(2·page/Bt)   otherwise
+
+with ``Bt = bk·bn·bytes_per_weight`` the tile footprint — identical logic to
+the paper's 36-bit BRAM word with precision P.
+
+Like the paper's LUT case (P < 10 bits → multiplications in LUTs → zero DSP
+cost), precisions at or below ``int8`` on TPU halve / quarter MXU passes;
+``int4`` packs 4x.  The table below mirrors the paper's case analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .structures import BlockingSpec, StructureInfo
+
+__all__ = [
+    "TPUResourceModel",
+    "ResourceVector",
+    "consecutive_groups",
+    "HardwareSpec",
+    "TPU_V5E",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target chip."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s
+    ici_bw: float = 50e9                # bytes/s/link
+    vmem_bytes: int = 128 * 1024 * 1024
+    mxu_dim: int = 128                  # systolic array side
+    sublane: int = 8
+    dma_page_bytes: int = 512           # HBM burst granule (BRAM-word analogue)
+
+
+TPU_V5E = HardwareSpec()
+
+# bytes per weight by precision name; < 1.0 entries pack multiple weights
+_BYTES = {"fp32": 4.0, "bf16": 2.0, "fp16": 2.0, "int8": 1.0, "fp8": 1.0, "int4": 0.5}
+# MXU pass multiplier: int8 runs 2 weights/lane-pass on v5e-class MXUs,
+# int4 packs 4 (the paper's "LUT multiplication" analogue is the cheaper
+# compute path unlocked by low precision).
+_MXU_SCALE = {"fp32": 2.0, "bf16": 1.0, "fp16": 1.0, "int8": 0.5, "fp8": 0.5, "int4": 0.25}
+
+ResourceVector = np.ndarray  # shape (m,) float64
+
+
+def consecutive_groups(page_bytes: int, tile_bytes: float) -> int:
+    """Paper Eq. 1: tiles per memory super-block.
+
+    If the tile footprint divides the page, C = page/tile; otherwise pruning
+    must capture a window of twice the page to guarantee at least one page
+    is freed: C = ceil(2·page/tile).  (Degenerate big tiles: C = 1.)
+    """
+    if tile_bytes >= page_bytes:
+        return 1
+    ratio = page_bytes / tile_bytes
+    if abs(ratio - round(ratio)) < 1e-9:
+        return int(round(ratio))
+    return int(math.ceil(2.0 * page_bytes / tile_bytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUResourceModel:
+    """Vector-valued resource estimator for one layer's structures.
+
+    resources modeled (m = 2): [mxu_passes, hbm_pages]
+
+    strategy:
+      "stream"   weights streamed HBM->VMEM every step (paper Resource
+                 strategy: BRAM-resident) — pays both mxu and hbm.
+      "resident" weights pinned in VMEM (paper Latency strategy:
+                 register-resident) — pays mxu only; hbm component 0,
+                 like the paper's CONV layers where BRAM is not used.
+    """
+
+    precision: str = "bf16"
+    strategy: str = "stream"
+    hw: HardwareSpec = TPU_V5E
+
+    @property
+    def bytes_per_weight(self) -> float:
+        return _BYTES[self.precision]
+
+    def tile_bytes(self, blocking: BlockingSpec) -> float:
+        return blocking.bk * blocking.bn * self.bytes_per_weight
+
+    def consecutive(self, blocking: BlockingSpec) -> int:
+        """Effective C for BRAM-aware (multi-dimensional) pruning."""
+        return consecutive_groups(self.hw.dma_page_bytes * 1024, self.tile_bytes(blocking))
+
+    def mxu_passes(self, blocking: BlockingSpec) -> float:
+        """MXU tile-passes occupied by one (bk, bn) structure.
+
+        Register granularity is (sublane=8, lane=128): a partially-filled
+        tile still occupies whole lanes, like a partially-used DSP.
+        """
+        lanes_k = math.ceil(blocking.bk / self.hw.sublane) * self.hw.sublane
+        lanes_n = math.ceil(blocking.bn / self.hw.mxu_dim) * self.hw.mxu_dim
+        passes = (lanes_k / self.hw.mxu_dim) * (lanes_n / self.hw.mxu_dim)
+        return passes * _MXU_SCALE[self.precision]
+
+    def hbm_pages(self, blocking: BlockingSpec) -> float:
+        if self.strategy == "resident":
+            return 0.0
+        return self.tile_bytes(blocking) / (self.hw.dma_page_bytes * 1024)
+
+    def structure_cost(self, blocking: BlockingSpec) -> ResourceVector:
+        """R(w_i) for one structure of this layer: [mxu, hbm]."""
+        return np.array(
+            [self.mxu_passes(blocking), self.hbm_pages(blocking)], dtype=np.float64
+        )
+
+    def layer_cost(self, info: StructureInfo) -> ResourceVector:
+        return self.structure_cost(info.blocking) * info.num_structures
+
+    # -- FPGA-mode: reproduces the paper's own DSP/BRAM numbers ------------
+
+    @staticmethod
+    def fpga_dsp_bram(precision_bits: int, rf: int, strategy: str = "resource") -> Tuple[float, float]:
+        """The paper's literal resource vector for one structure.
+
+        DSP-aware structure (length RF): 1 DSP, RF·P bits of BRAM
+        (as a fraction of a 36-bit x 1024 BRAM block) in Resource strategy.
+        Precisions < 10 bits map multiplications to LUTs => 0 DSPs
+        (paper footnote 3).
+        """
+        dsp = 0.0 if precision_bits < 10 else 1.0
+        if strategy == "latency":
+            return dsp, 0.0
+        bram_bits_per_block = 36.0 * 1024.0
+        bram = (rf * precision_bits) / bram_bits_per_block
+        return dsp, bram

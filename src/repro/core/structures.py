@@ -1,0 +1,222 @@
+"""Resource-aware tensor structures (paper §III-A, adapted to TPU).
+
+The paper groups weights by the hardware resource that processes them:
+
+* FPGA DSP group  = ``RF`` consecutive weights time-multiplexed onto one
+  multiplier (transpose + flatten + split into length-``RF`` sub-vectors).
+* FPGA BRAM group = ``C`` consecutive DSP groups sharing a 36-bit BRAM word.
+
+On TPU the atomic compute resource is an MXU *tile*: a ``(bk, bn)`` block of
+the weight matrix that occupies one systolic pass.  The memory resource is a
+*super-block* of ``C`` consecutive tiles along the HBM streaming order (the
+DMA-page analogue of a BRAM word).  This module maps weight pytrees to and
+from those structures.
+
+A "structure" here is always a *block partition of the last two dims* of a
+weight tensor; leading dims (e.g. the expert dim of an MoE weight) become
+independent planes so that pruning an entire plane's blocks removes the
+expert — the coarse structure the paper exploits per-layer on LeNet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockingSpec",
+    "StructureInfo",
+    "LayerStructures",
+    "block_partition",
+    "structure_norms_dense",
+    "mask_from_selection",
+    "iter_prunable",
+    "PRUNABLE_MIN_SIZE",
+]
+
+# Tensors smaller than this (in elements) are never pruned — the paper keeps
+# tiny layers dense (LeNet fc_3 stays in Latency strategy with RF=1).
+PRUNABLE_MIN_SIZE = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockingSpec:
+    """TPU analogue of the paper's (RF, C) grouping knobs.
+
+    bk, bn        block (tile) shape over the (in, out) dims of a matmul
+                  weight.  MXU-aligned defaults: multiples of (8, 128).
+    consecutive   ``C``: how many consecutive tiles form one memory
+                  super-block (Eq. 1 analogue, see resource_model).
+    """
+
+    bk: int = 128
+    bn: int = 128
+    consecutive: int = 1
+
+    def __post_init__(self):
+        if self.bk <= 0 or self.bn <= 0 or self.consecutive <= 0:
+            raise ValueError(f"invalid blocking {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StructureInfo:
+    """Static description of the structures of one weight tensor."""
+
+    path: str                    # pytree key-path, '/'-joined
+    shape: Tuple[int, ...]       # full weight shape
+    planes: int                  # product of leading dims (experts etc.)
+    grid_k: int                  # number of blocks along the in dim
+    grid_n: int                  # number of blocks along the out dim
+    blocking: BlockingSpec
+
+    @property
+    def num_structures(self) -> int:
+        return self.planes * self.grid_k * self.grid_n
+
+    @property
+    def block_elems(self) -> int:
+        return self.blocking.bk * self.blocking.bn
+
+    def structure_index(self, plane: int, ik: int, in_: int) -> int:
+        return (plane * self.grid_k + ik) * self.grid_n + in_
+
+
+@dataclasses.dataclass
+class LayerStructures:
+    """All structures of a model: flat arrays aligned across layers.
+
+    ``infos`` is ordered; structure ids are contiguous per layer in that
+    order, which lets knapsack results map back to masks without a dict of
+    per-item metadata (important at the 1e5..1e6-structure scale of the
+    assigned LMs).
+    """
+
+    infos: List[StructureInfo]
+
+    def layer_offsets(self) -> np.ndarray:
+        sizes = np.array([i.num_structures for i in self.infos], dtype=np.int64)
+        return np.concatenate([[0], np.cumsum(sizes)])
+
+    @property
+    def total_structures(self) -> int:
+        return int(sum(i.num_structures for i in self.infos))
+
+
+def _split_leading(shape: Sequence[int]) -> Tuple[int, int, int]:
+    """(planes, K, N) from an arbitrary-rank weight shape.
+
+    The last two dims are the matmul (in, out) dims; everything in front is
+    folded into independent planes.  1-D tensors are treated as (1, 1, N)
+    so biases group with single tiles along the out dim.
+    """
+    if len(shape) == 0:
+        return 1, 1, 1
+    if len(shape) == 1:
+        return 1, 1, shape[0]
+    planes = int(np.prod(shape[:-2], dtype=np.int64)) if len(shape) > 2 else 1
+    return planes, shape[-2], shape[-1]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def block_partition(path: str, shape: Sequence[int], blocking: BlockingSpec) -> StructureInfo:
+    planes, k, n = _split_leading(shape)
+    bk = min(blocking.bk, k)
+    bn = min(blocking.bn, n)
+    eff = BlockingSpec(bk=bk, bn=bn, consecutive=blocking.consecutive)
+    return StructureInfo(
+        path=path,
+        shape=tuple(int(s) for s in shape),
+        planes=planes,
+        grid_k=_ceil_div(k, bk),
+        grid_n=_ceil_div(n, bn),
+        blocking=eff,
+    )
+
+
+def _pad_to_grid(w2d: jnp.ndarray, info: StructureInfo) -> jnp.ndarray:
+    """Zero-pad the (K, N) trailing dims up to whole blocks."""
+    bk, bn = info.blocking.bk, info.blocking.bn
+    k, n = w2d.shape[-2], w2d.shape[-1]
+    pk = info.grid_k * bk - k
+    pn = info.grid_n * bn - n
+    if pk or pn:
+        pad = [(0, 0)] * (w2d.ndim - 2) + [(0, pk), (0, pn)]
+        w2d = jnp.pad(w2d, pad)
+    return w2d
+
+
+def structure_norms_dense(w: jnp.ndarray, info: StructureInfo) -> jnp.ndarray:
+    """Per-structure L2 norms, shape (planes, grid_k, grid_n). Pure jnp.
+
+    This is the reference path; ``kernels/structure_norms.py`` is the Pallas
+    fast path used on TPU for the very large assigned archs.
+    """
+    planes, k, n = _split_leading(w.shape)
+    w2 = w.reshape(planes, k, n)
+    w2 = _pad_to_grid(w2, info)
+    bk, bn = info.blocking.bk, info.blocking.bn
+    w4 = w2.reshape(planes, info.grid_k, bk, info.grid_n, bn)
+    sq = jnp.sum(jnp.square(w4.astype(jnp.float32)), axis=(2, 4))
+    return jnp.sqrt(sq)
+
+
+def mask_from_selection(selected: np.ndarray, info: StructureInfo) -> np.ndarray:
+    """Expand a per-structure {0,1} selection into a full weight mask.
+
+    ``selected`` has ``info.num_structures`` entries ordered
+    (plane, ik, in); the returned mask has ``info.shape`` (cropped from the
+    padded grid).
+    """
+    sel = np.asarray(selected, dtype=np.float32).reshape(
+        info.planes, info.grid_k, info.grid_n
+    )
+    bk, bn = info.blocking.bk, info.blocking.bn
+    big = np.repeat(np.repeat(sel, bk, axis=1), bn, axis=2)
+    planes, k, n = _split_leading(info.shape)
+    big = big[:, :k, :n]
+    return big.reshape(info.shape)
+
+
+def iter_prunable(
+    params: Mapping[str, Any],
+    *,
+    include: Optional[Sequence[str]] = None,
+    exclude: Sequence[str] = ("norm", "scale", "bias_only", "embed_norm", "a_log", "dt", "gate_vec"),
+    min_size: int = PRUNABLE_MIN_SIZE,
+) -> Iterable[Tuple[str, jnp.ndarray]]:
+    """Yield (path, weight) for prunable tensors in a params pytree.
+
+    Matmul weights only: ndim >= 2 and size >= min_size, path not matching
+    the exclusion list (norm scales, SSM scalars, gate vectors ... the
+    non-matmul parameters the paper also excludes from DSP mapping).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(dict(params))[0]
+    for keypath, leaf in flat:
+        path = "/".join(_key_str(k) for k in keypath)
+        if leaf is None or not hasattr(leaf, "shape"):
+            continue
+        if leaf.ndim < 2 or int(np.prod(leaf.shape)) < min_size:
+            continue
+        lowered = path.lower()
+        if any(e in lowered for e in exclude):
+            continue
+        if include is not None and not any(i in lowered for i in include):
+            continue
+        yield path, leaf
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)

@@ -1,0 +1,5 @@
+"""Deterministic synthetic data substrate."""
+from .pipeline import LMPipeline
+from .synthetic import ImageTask, JetsTask, TokenTask
+
+__all__ = ["LMPipeline", "ImageTask", "JetsTask", "TokenTask"]

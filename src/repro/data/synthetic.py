@@ -1,0 +1,104 @@
+"""Deterministic synthetic datasets.
+
+Everything is a pure function of (seed, step) — the fault-tolerance
+cornerstone: any host can regenerate any batch after a restart or an
+elastic resize, so the data pipeline never needs coordinated state.
+
+* LM tokens: an order-2 random automaton over the vocab with noise — has
+  real learnable structure (loss decreases under training) while needing
+  zero files on disk.
+* jets: 5-class gaussian mixtures over 16 features (the paper's jet
+  tagging task, synthesized).
+* images: class-template images + noise (SVHN/F-MNIST stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TokenTask", "JetsTask", "ImageTask"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenTask:
+    vocab: int
+    seed: int = 0
+    noise: float = 0.05
+
+    def _auto(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(0, self.vocab, size=(min(self.vocab, 4096),), dtype=np.int32)
+
+    def batch(self, step: int, batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+        """tokens/labels (B, S) int32; labels are next-token."""
+        table = self._auto()
+        m = table.shape[0]
+        rng = np.random.default_rng((self.seed, step))
+        x = np.empty((batch, seq + 1), dtype=np.int32)
+        x[:, 0] = rng.integers(0, self.vocab, size=batch)
+        cur = x[:, 0] % m
+        for t in range(1, seq + 1):
+            nxt = table[cur % m] % self.vocab
+            flip = rng.uniform(size=batch) < self.noise
+            nxt = np.where(flip, rng.integers(0, self.vocab, size=batch), nxt)
+            x[:, t] = nxt
+            cur = (cur * 31 + nxt) % m
+        return {
+            "tokens": jnp.asarray(x[:, :-1]),
+            "labels": jnp.asarray(x[:, 1:]),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class JetsTask:
+    """Paper benchmark: 16 features -> 5 classes (W/Z/t/q/g)."""
+
+    features: int = 16
+    classes: int = 5
+    seed: int = 7
+    scale: float = 0.8   # tuned: ~92% baseline acc (paper jets task: 76.6%)
+
+    def _centers(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.normal(size=(self.classes, self.features)) * self.scale
+
+    def batch(self, step: int, batch: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        centers = self._centers()
+        rng = np.random.default_rng((self.seed, step))
+        y = rng.integers(0, self.classes, size=batch)
+        x = centers[y] + rng.normal(size=(batch, self.features))
+        return jnp.asarray(x.astype(np.float32)), jnp.asarray(y.astype(np.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageTask:
+    """Template-plus-noise image classification (SVHN / F-MNIST scale)."""
+
+    height: int = 28
+    width: int = 28
+    channels: int = 1
+    classes: int = 10
+    seed: int = 11
+    noise: float = 0.6
+
+    def _templates(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        t = rng.normal(size=(self.classes, self.height, self.width, self.channels))
+        # low-pass: classes differ in coarse structure, like digits
+        from numpy.fft import irfft2, rfft2
+
+        f = rfft2(t, axes=(1, 2))
+        f[:, 6:, :, :] = 0
+        f[:, :, 6:, :] = 0
+        return irfft2(f, s=(self.height, self.width), axes=(1, 2)).real * 3.0
+
+    def batch(self, step: int, batch: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        tem = self._templates()
+        rng = np.random.default_rng((self.seed, step))
+        y = rng.integers(0, self.classes, size=batch)
+        x = tem[y] + rng.normal(size=(batch, self.height, self.width, self.channels)) * self.noise
+        return jnp.asarray(x.astype(np.float32)), jnp.asarray(y.astype(np.int32))

@@ -1,0 +1,15 @@
+"""Distribution substrate: sharding rules, collectives, compression."""
+from .sharding import (
+    axis_rules,
+    current_rules,
+    logical_constraint,
+    make_decode_rules,
+    make_train_rules,
+    named_sharding_tree,
+    param_pspecs,
+)
+
+__all__ = [
+    "axis_rules", "current_rules", "logical_constraint", "make_decode_rules",
+    "make_train_rules", "named_sharding_tree", "param_pspecs",
+]

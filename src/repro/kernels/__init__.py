@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* block_sparse_matmul — the §III-C zero-skipping codegen analogue (BSR)
+* structure_norms     — Algorithm 2's per-structure value sweep
+
+Each kernel ships with a jit wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes with assert_allclose in interpret mode.
+"""
+from .ops import bsr_matmul, structure_norms
+
+__all__ = ["bsr_matmul", "structure_norms"]

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` defaults to interpret-mode on CPU hosts (this container) and
+compiled mode on real TPU backends; the pure-jnp fallbacks are what the
+dry-run lowers (Pallas TPU kernels cannot target the CPU SPMD dry-run —
+see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import BSRWeight
+from .block_sparse_matmul import bsr_matmul_pallas
+from .structure_norms import structure_norms_pallas
+from . import ref as _ref
+
+__all__ = ["bsr_matmul", "structure_norms", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
+def bsr_matmul(
+    x: jnp.ndarray,
+    bsr: BSRWeight,
+    *,
+    bm: int = 128,
+    mode: str = "auto",          # auto | pallas | interpret | ref
+) -> jnp.ndarray:
+    """y = x @ W_bsr for x (..., K); skips pruned tiles on TPU."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if mode == "ref" or (mode == "auto" and not on_tpu()):
+        y = _ref.bsr_matmul_ref(x2, bsr)
+    else:
+        interpret = (mode == "interpret") or (mode == "auto" and not on_tpu())
+        y = bsr_matmul_pallas(
+            x2, bsr.indices, bsr.blocks, n=bsr.shape[1], bm=bm, interpret=interpret
+        )
+    return y.reshape(*lead, bsr.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "mode"))
+def structure_norms(
+    w: jnp.ndarray, *, bk: int = 128, bn: int = 128, mode: str = "auto"
+) -> jnp.ndarray:
+    """Tile L2 norms (grid_k, grid_n) fp32 for a (K, N) weight."""
+    if mode == "ref" or (mode == "auto" and not on_tpu()):
+        return _ref.structure_norms_ref(w, bk, bn)
+    interpret = (mode == "interpret") or (mode == "auto" and not on_tpu())
+    return structure_norms_pallas(w, bk=bk, bn=bn, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import BSRWeight, bsr_to_dense
+
+__all__ = ["bsr_matmul_ref", "structure_norms_ref"]
+
+
+def bsr_matmul_ref(x: jnp.ndarray, bsr: BSRWeight) -> jnp.ndarray:
+    """y = x @ dense(bsr), fp32 accumulation."""
+    dense = bsr_to_dense(bsr)
+    y = jnp.dot(x, dense.astype(x.dtype), preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def structure_norms_ref(w: jnp.ndarray, bk: int, bn: int) -> jnp.ndarray:
+    k, n = w.shape
+    bk, bn = min(bk, k), min(bn, n)
+    gk, gn = -(-k // bk), -(-n // bn)
+    wp = jnp.pad(w, ((0, gk * bk - k), (0, gn * bn - n)))
+    t = wp.reshape(gk, bk, gn, bn)
+    return jnp.sqrt(jnp.sum(jnp.square(t.astype(jnp.float32)), axis=(1, 3)))

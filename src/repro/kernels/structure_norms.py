@@ -1,0 +1,46 @@
+"""Per-structure L2 norms Pallas kernel — the pruning-step hot spot.
+
+Every pruning iteration computes ||w_i|| for every resource-aware structure
+(Algorithm 2's value update).  At the 100B-param scale of the assigned
+archs that is a full sweep over all weights; this kernel tiles the weight
+matrix through VMEM once, emitting one fp32 norm per (bk, bn) tile.
+
+Grid: (grid_k, grid_n); each step reduces one tile.  Reference oracle:
+``core.structures.structure_norms_dense``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["structure_norms_kernel", "structure_norms_pallas"]
+
+
+def structure_norms_kernel(w_ref, o_ref):
+    sq = jnp.sum(jnp.square(w_ref[...].astype(jnp.float32)))
+    o_ref[0, 0] = jnp.sqrt(sq)
+
+
+def structure_norms_pallas(
+    w: jnp.ndarray,          # (K, N)
+    *,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (grid_k, grid_n) fp32 tile norms (zero-padded tail tiles)."""
+    k, n = w.shape
+    bk, bn = min(bk, k), min(bn, n)
+    gk, gn = -(-k // bk), -(-n // bn)
+    pk, pn = gk * bk - k, gn * bn - n
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    return pl.pallas_call(
+        structure_norms_kernel,
+        grid=(gk, gn),
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gk, gn), jnp.float32),
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, dry-run, roofline, train/serve CLIs.
+
+NOTE: importing this package does NOT touch jax device state; dryrun.py
+sets XLA_FLAGS only when executed as a script.
+"""

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16x16 = 256 chips (data, model).
+Multi-pod: 2x16x16 = 512 chips (pod, data, model) — the pod axis is pure
+DP with optional int8-compressed gradient all-reduce (optim/compression).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return shape, axes
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape, axes = make_mesh_shape(multi_pod=multi_pod)
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are "
+            f"visible — the dry-run sets XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=512 before importing jax (launch/dryrun.py)."
+        )
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(AxisType.Auto,) * len(axes),
+        devices=devices[:n],
+    )
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for CPU unit tests (8 forced host devices)."""
+    n = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(AxisType.Auto,) * len(axes),
+        devices=jax.devices()[:n],
+    )

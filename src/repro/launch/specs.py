@@ -1,0 +1,174 @@
+"""Per-cell sharding specs: params/opt/batch/caches PartitionSpec trees.
+
+Centralizes every divisibility-aware placement decision of the dry-run
+(DESIGN.md §4).  All helpers return PartitionSpec pytrees; NamedShardings
+are built at the jit boundary.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, input_specs
+from repro.distributed.sharding import make_decode_rules, make_train_rules, param_pspecs
+
+__all__ = [
+    "dp_axes", "batch_axis_for", "cell_shardings", "state_pspecs",
+    "tree_named", "rules_for_cell",
+]
+
+
+def dp_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def batch_axis_for(bsize: int, mesh: Mesh, multi_pod: bool):
+    """Largest dp prefix that divides the batch (fallback: replicate)."""
+    for cand in (dp_axes(multi_pod), ("data",), None):
+        if cand is None:
+            return None
+        if bsize % _axis_size(mesh, cand) == 0:
+            return tuple(cand)
+    return None
+
+
+def seq_axes_for(seq: int, mesh: Mesh, batch_sharded: bool):
+    """Cache sequence placement: if batch is unshardable (long_500k B=1),
+    spread the cache seq over everything that divides it."""
+    cands = (("model",),) if batch_sharded else (("data", "model"), ("model",), ("data",))
+    for cand in cands:
+        if seq % _axis_size(mesh, cand) == 0:
+            return tuple(cand)
+    return None
+
+
+def _dim(mesh: Mesh, size: int, axis):
+    """axis if it divides size else None."""
+    if axis is None or size % _axis_size(mesh, axis) != 0:
+        return None
+    return axis
+
+
+def cache_pspecs(caches, cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                 multi_pod: bool):
+    """PartitionSpec tree matching models.transformer.init_caches output."""
+    b = cell.global_batch
+    bax = batch_axis_for(b, mesh, multi_pod)
+    sax = None  # per-leaf, depends on allocated length
+
+    def spec_for(path: str, leaf) -> P:
+        shape = leaf.shape
+        if "cross" in path:                # (B, enc_frames, kv, dh)
+            return P(_dim(mesh, shape[0], bax), None, None, None)
+        if path.endswith("conv"):          # mamba (B, k-1, d_inner)
+            return P(_dim(mesh, shape[0], bax), None, _dim(mesh, shape[2], "model"))
+        if path.endswith("ssm"):           # mamba (B, d_inner, N)
+            return P(_dim(mesh, shape[0], bax), _dim(mesh, shape[1], "model"), None)
+        if path.endswith("C"):             # mlstm (B, H, dk, dv)
+            return P(_dim(mesh, shape[0], bax), None, None, _dim(mesh, shape[3], "model"))
+        if len(shape) == 4:                # attn KV cache (B, S_alloc, kv, dh)
+            s_ax = seq_axes_for(shape[1], mesh, bax is not None)
+            return P(_dim(mesh, shape[0], bax), s_ax, None, None)
+        if len(shape) == 3:                # mlstm n (B, H, dk)
+            return P(_dim(mesh, shape[0], bax), None, _dim(mesh, shape[2], "model"))
+        if len(shape) == 2:                # slstm c/n/h/m (B, d) / mlstm m (B, H)
+            return P(_dim(mesh, shape[0], bax), _dim(mesh, shape[1], "model"))
+        return P(*([_dim(mesh, shape[0], bax)] + [None] * (len(shape) - 1)))
+
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    specs = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        specs.append(spec_for(path, leaf))
+    return jax.tree.unflatten(jax.tree.structure(caches), specs)
+
+
+def batch_pspecs(batch, mesh: Mesh, cell: ShapeCell, multi_pod: bool):
+    bax = batch_axis_for(cell.global_batch, mesh, multi_pod)
+
+    def spec(path, leaf):
+        lead = _dim(mesh, leaf.shape[0], bax)
+        return P(*([lead] + [None] * (leaf.ndim - 1)))
+
+    flat = jax.tree_util.tree_flatten_with_path(batch)[0]
+    specs = [spec(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree.unflatten(jax.tree.structure(batch), specs)
+
+
+def state_pspecs(state_shapes, mesh: Mesh):
+    """Specs for {"params", "opt", "step"(, "masks")}: opt moments mirror
+    their parameters; counters replicated."""
+    pspec = param_pspecs(state_shapes["params"], mesh)
+    out: Dict[str, Any] = {"params": pspec, "step": P()}
+    opt = {"m": pspec, "v": pspec, "count": P()}
+    if "master" in state_shapes["opt"]:
+        opt["master"] = pspec
+    out["opt"] = opt
+    if "masks" in state_shapes:
+        out["masks"] = jax.tree.map(
+            lambda leaf: None, state_shapes["masks"], is_leaf=lambda x: x is None
+        )
+        # masks mirror their params' sharding where present
+        out["masks"] = _mask_specs(state_shapes["masks"], pspec)
+    return out
+
+
+def _mask_specs(masks, pspec):
+    def walk(m, s):
+        if isinstance(m, dict):
+            return {k: walk(m[k], s.get(k) if isinstance(s, dict) else None) for k in m}
+        if isinstance(m, list):
+            return [walk(mm, s[i] if isinstance(s, list) else None) for i, mm in enumerate(m)]
+        if m is None:
+            return None
+        return s if s is not None else P()
+
+    return walk(masks, pspec)
+
+
+def tree_named(pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if s is not None else NamedSharding(mesh, P()),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def rules_for_cell(cell: ShapeCell, mesh: Mesh, multi_pod: bool):
+    if cell.kind == "decode":
+        bax = batch_axis_for(cell.global_batch, mesh, multi_pod)
+        return make_decode_rules(multi_pod, shard_cache_seq=bax is None)
+    return make_train_rules(multi_pod)
+
+
+def cell_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh, multi_pod: bool,
+                   specs: Dict[str, Any], state_shapes=None):
+    """Full sharding bundle for one dry-run cell.
+
+    specs: output of configs.input_specs.  state_shapes: eval_shape of the
+    train state (train cells only).  Returns dict of PartitionSpec trees."""
+    out: Dict[str, Any] = {"batch": batch_pspecs(specs["batch"], mesh, cell, multi_pod)}
+    if cell.kind == "train":
+        assert state_shapes is not None
+        out["state"] = state_pspecs(state_shapes, mesh)
+    else:
+        params_shapes = state_shapes["params"] if state_shapes and "params" in state_shapes \
+            else state_shapes
+        out["params"] = param_pspecs(params_shapes, mesh)
+    if cell.kind == "decode":
+        out["caches"] = cache_pspecs(specs["caches"], cfg, cell, mesh, multi_pod)
+        out["cache_len"] = P()
+    return out

@@ -1,0 +1,112 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen1.5-0.5b
+--steps 200 --batch 8 --seq 256 [--prune] [--smoke]``.
+
+On this CPU container use ``--smoke`` (reduced config); on a real fleet the
+same entrypoint drives the production mesh via ``--mesh single|multi``.
+"""
+import argparse
+import logging
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--prune", action="store_true",
+                    help="run resource-aware pruning after training")
+    ap.add_argument("--prune-target", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, make_smoke
+    from repro.data import LMPipeline, TokenTask
+    from repro.models import init_params
+    from repro.optim import AdamWConfig, warmup_cosine
+    from repro.train import Trainer, TrainerConfig, init_train_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = make_smoke(cfg)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    opt_cfg = AdamWConfig(use_master=cfg.param_dtype != "float32")
+    state = init_train_state(params, opt_cfg)
+    step = jax.jit(make_train_step(
+        cfg, opt_cfg, warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)))
+
+    task = TokenTask(vocab=cfg.vocab, seed=args.seed)
+    pipe = LMPipeline(task, args.batch, args.seq, mesh=mesh)
+
+    trainer = Trainer(
+        step, state, pipe.batch_at,
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=max(args.steps // 20, 1)),
+    )
+    result = trainer.run()
+    print(f"done: step={result['final_step']} preempted={result['preempted']} "
+          f"stragglers={len(result['stragglers'])}")
+    if result["metrics"]:
+        first, last = result["metrics"][0], result["metrics"][-1]
+        print(f"loss {first['total_loss']:.4f} -> {last['total_loss']:.4f}")
+
+    if args.prune:
+        from repro.core import (
+            BlockingSpec, IterativePruner, PruneConfig, TPUResourceModel,
+            apply_masks, build_structures, constant_step,
+        )
+        from repro.models import cross_entropy_loss, lm_forward
+
+        params = trainer.state["params"]
+        structures = build_structures(params, BlockingSpec(bk=128, bn=128),
+                                      min_size=4096)
+        pruner = IterativePruner(
+            structures,
+            TPUResourceModel(precision=("bf16" if cfg.param_dtype == "bfloat16"
+                                         else "fp32")),
+            PruneConfig(schedule=constant_step([args.prune_target, args.prune_target], 0.1),
+                        tolerance=0.05, higher_is_better=False),
+        )
+        eval_batch = pipe.batch_at(10_000)
+
+        def eval_fn(p, masks):
+            logits, _ = lm_forward(apply_masks(p, masks), eval_batch, cfg)
+            return float(cross_entropy_loss(logits, eval_batch["labels"]))
+
+        def finetune_fn(p, masks):
+            st = init_train_state(p, opt_cfg, masks=masks)
+            fstep = jax.jit(make_train_step(
+                cfg, opt_cfg, warmup_cosine(args.lr / 3, 2, 20)))
+            for s in range(10):
+                st, _ = fstep(st, pipe.batch_at(20_000 + s))
+            return st["params"]
+
+        params, masks, logs = pruner.run(params, finetune_fn, eval_fn)
+        for log in logs:
+            red = log.reduction()
+            print(f"prune it={log.iteration} metric={log.metric:.4f} "
+                  f"structs={log.structure_sparsity:.1%} "
+                  f"mxu_red={red[0]:.2f}x hbm_red={red[1]:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

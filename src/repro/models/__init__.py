@@ -1,0 +1,19 @@
+"""Model zoo: composable transformer stack + the paper's own benchmarks."""
+from .transformer import (
+    LayerSpec,
+    cross_entropy_loss,
+    encode_kv_caches,
+    encoder_forward,
+    init_caches,
+    init_params,
+    layer_specs,
+    lm_decode,
+    lm_forward,
+)
+from .cnn import PAPER_MODELS, paper_model
+
+__all__ = [
+    "LayerSpec", "cross_entropy_loss", "encode_kv_caches", "encoder_forward",
+    "init_caches", "init_params", "layer_specs", "lm_decode", "lm_forward",
+    "PAPER_MODELS", "paper_model",
+]

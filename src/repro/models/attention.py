@@ -1,0 +1,256 @@
+"""Attention: GQA / MHA / sliding-window, chunked (flash-style) training
+path, KV-cache decode path (flash-decode compatible sharding).
+
+Training uses a *statically chunked* causal attention: an unrolled loop
+over query chunks, each attending to keys `[lo, hi)` where the bounds are
+python ints — so (i) peak memory is O(S·chunk) not O(S²), (ii) sliding
+windows skip out-of-range KV chunks entirely (real FLOP savings, visible
+in the roofline terms), (iii) XLA's cost analysis sees every chunk
+(no while-loop undercount; see DESIGN.md §4).
+
+Decode attends a single query over the whole cache with fp32 softmax.  For
+``long_500k`` the cache's *sequence* dim is sharded ("kv_seq" logical
+axis); the softmax over the sharded axis lowers to the flash-decode
+partial-stats + all-reduce pattern under GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from .layers import apply_mrope, apply_rope, dense, dense_init
+
+__all__ = [
+    "attention_init",
+    "attention_apply",
+    "attention_decode",
+    "chunked_causal_attention",
+    "full_attention",
+    "init_kv_cache",
+]
+
+NEG_INF = -1e30
+
+
+def attention_init(
+    key,
+    d_model: int,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+    out_bias: bool = False,
+    dtype=jnp.float32,
+) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], d_model, kv_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], d_model, kv_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+        "wo": dense_init(
+            ks[3], num_heads * head_dim, d_model, use_bias=out_bias, dtype=dtype,
+            stddev=1.0 / math.sqrt(num_heads * head_dim),
+        ),
+    }
+
+
+def _split_heads(x: jnp.ndarray, heads: int) -> jnp.ndarray:
+    b, s, hd = x.shape
+    return x.reshape(b, s, heads, hd // heads)
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Sq,K,G,dh), k (B,Sk,K,dh) -> (B,K,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_values(w: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """w (B,K,G,Sq,Sk) fp32, v (B,Sk,K,dh) -> (B,Sq,K,G,dh)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,           # (B, S, H, dh) — already rotated
+    k: jnp.ndarray,           # (B, S, K, dh)
+    v: jnp.ndarray,           # (B, S, K, dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    q_offset: int = 0,        # absolute position of q[0] (cross-chunk prefill)
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, s, kv_heads, g, dh)
+    sk = k.shape[1]
+    chunk = min(chunk, s)
+    out = []
+    for qs in range(0, s, chunk):
+        qe = min(qs + chunk, s)
+        abs_qs, abs_qe = qs + q_offset, qe + q_offset
+        hi = min(abs_qe, sk) if causal else sk
+        lo = 0 if window is None else max(0, abs_qs - window + 1)
+        if hi <= lo:
+            out.append(jnp.zeros((b, qe - qs, kv_heads, g, dh), q.dtype))
+            continue
+        kc, vc = k[:, lo:hi], v[:, lo:hi]
+        scores = _gqa_scores(qg[:, qs:qe], kc) * scale  # (B,K,G,q,kv)
+        if causal or window is not None:
+            qpos = jnp.arange(abs_qs, abs_qe)[:, None]
+            kpos = jnp.arange(lo, hi)[None, :]
+            mask = jnp.ones((qe - qs, hi - lo), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out.append(_gqa_values(w, vc).astype(q.dtype))
+    return jnp.concatenate(out, axis=1).reshape(b, s, h, dh)
+
+
+def full_attention(q, k, v, *, causal=True, window=None):
+    """Unchunked oracle (tests)."""
+    return chunked_causal_attention(q, k, v, causal=causal, window=window, chunk=q.shape[1])
+
+
+def attention_apply(
+    p: Dict,
+    x: jnp.ndarray,                       # (B, S, D)
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    rope_theta: float = 10000.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    kv_input: Optional[jnp.ndarray] = None,   # cross-attention source
+    use_rope: bool = True,
+    accum=None,
+    out_seq: str = "seq",
+) -> jnp.ndarray:
+    accum = accum or jnp.float32
+    b, s, _ = x.shape
+    src = kv_input if kv_input is not None else x
+    q = _split_heads(dense(p["wq"], x), num_heads)
+    k = _split_heads(dense(p["wk"], src), kv_heads)
+    v = _split_heads(dense(p["wv"], src), kv_heads)
+    q = logical_constraint(q, "batch", "seq", "heads", None)
+    k = logical_constraint(k, "batch", "seq", "kv", None)
+    v = logical_constraint(v, "batch", "seq", "kv", None)
+    if use_rope:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if mrope_sections is not None:
+            q = apply_mrope(q, positions, mrope_sections, theta=rope_theta)
+            k = apply_mrope(k, positions, mrope_sections, theta=rope_theta)
+        else:
+            q = apply_rope(q, positions, theta=rope_theta)
+            k = apply_rope(k, positions, theta=rope_theta)
+    o = chunked_causal_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    o = logical_constraint(o, "batch", "seq", "heads", None)
+    if "bias" not in p["wo"]:
+        # contract (heads, dh) via a kernel-side reshape: reshaping the
+        # *activation* (B,S,H,dh)->(B,S,H*dh) merges the heads-sharded dim
+        # with dh and forces a full all-gather fwd+bwd (32 GB/step measured
+        # on qwen/train_4k — EXPERIMENTS.md §Perf P5); the kernel reshape
+        # is tile-aligned (whole heads per shard) and free.
+        w3 = p["wo"]["kernel"].reshape(num_heads, head_dim, -1)
+        out = jnp.einsum("bshd,hde->bse", o, w3,
+                         preferred_element_type=accum).astype(x.dtype)
+    else:
+        out = dense(p["wo"], o.reshape(b, s, num_heads * head_dim), accum=accum)
+    return logical_constraint(out, "batch", out_seq, "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(
+    batch: int, max_len: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16
+) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+    }
+
+
+def attention_decode(
+    p: Dict,
+    x: jnp.ndarray,                       # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],
+    cache_len: jnp.ndarray,               # scalar int32: #valid positions
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    window: Optional[int] = None,
+    rope_theta: float = 10000.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    update_cache: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode over a (possibly seq-sharded) KV cache.
+
+    The new K/V is written at ``cache_len`` (dynamic_update_slice); scores
+    over invalid positions are masked.  With the cache's seq dim sharded
+    ("kv_seq"), GSPMD lowers the softmax to partial stats + all-reduce —
+    the flash-decode pattern.
+    """
+    b = x.shape[0]
+    max_len = cache["k"].shape[1]
+    ring = window is not None and max_len <= window  # SWA ring buffer
+    q = _split_heads(dense(p["wq"], x), num_heads)          # (B,1,H,dh)
+    pos = jnp.broadcast_to(cache_len[None, None], (b, 1))
+    if update_cache:
+        write_pos = cache_len % max_len if ring else cache_len
+        knew = _split_heads(dense(p["wk"], x), kv_heads)
+        vnew = _split_heads(dense(p["wv"], x), kv_heads)
+        if mrope_sections is not None:
+            pos3 = jnp.tile(pos[..., None], (1, 1, 3))
+            q = apply_mrope(q, pos3, mrope_sections, theta=rope_theta)
+            knew = apply_mrope(knew, pos3, mrope_sections, theta=rope_theta)
+        else:
+            q = apply_rope(q, pos, theta=rope_theta)
+            knew = apply_rope(knew, pos, theta=rope_theta)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], knew.astype(cache["k"].dtype), (0, write_pos, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], vnew.astype(cache["v"].dtype), (0, write_pos, 0, 0)
+        )
+        cache = {"k": ck, "v": cv}
+    else:  # cross-attention: cache holds encoder K/V, no rope on q
+        pass
+    ck = logical_constraint(cache["k"], "batch", "kv_seq", "kv", None)
+    cv = logical_constraint(cache["v"], "batch", "kv_seq", "kv", None)
+
+    g = num_heads // kv_heads
+    qg = q.reshape(b, 1, kv_heads, g, head_dim)
+    scores = _gqa_scores(qg, ck) / math.sqrt(head_dim)      # (B,K,G,1,S)
+    kpos = jnp.arange(ck.shape[1])
+    if not update_cache:
+        valid = kpos < cache_len                    # cross-attn: encoder len
+    elif ring:
+        # ring slots hold the last min(cache_len+1, max_len) tokens — all
+        # valid once full; before that, only slots [0, cache_len]
+        valid = kpos <= cache_len
+    else:
+        valid = kpos <= cache_len
+        if window is not None:
+            valid &= kpos > cache_len - window
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_values(w, cv).astype(x.dtype)                  # (B,1,K,G,dh)
+    o = dense(p["wo"], o.reshape(b, 1, num_heads * head_dim))
+    return o, cache

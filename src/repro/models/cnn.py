@@ -1,0 +1,163 @@
+"""The paper's own benchmark models (Table I):
+
+* Jets  — 4-layer FC (16 -> 64 -> 32 -> 32 -> 5), ReLU     [Duarte et al.]
+* SVHN  — low-latency CNN (3 conv + 3 FC)                  [Aarrestad et al.]
+* LeNet — LeNet-like with 3x3 kernels for 28x28 F-MNIST    [paper §IV-D]
+
+Pure JAX; kernels are (in, out) dense / (kh, kw, cin, cout) conv so the
+resource-aware structures map exactly as in the paper: per-layer RF and
+strategy are carried in ``FpgaLayerCfg`` to reproduce Tables II/III/V
+resource vectors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, truncated_normal_init
+
+__all__ = [
+    "FpgaLayerCfg", "PAPER_MODELS", "init_jets_mlp", "jets_mlp_forward",
+    "init_svhn_cnn", "svhn_cnn_forward", "init_lenet", "lenet_forward",
+    "paper_model", "LENET_LAYER_CFG",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FpgaLayerCfg:
+    """Per-layer hls4ml hardware configuration (paper Table IV)."""
+
+    name: str
+    rf: int
+    strategy: str            # "latency" | "resource"
+    precision_bits: int = 16
+
+
+# ---------------------------------------------------------------------------
+# Jets MLP (paper: 4,389 params, 76.6% acc)
+# ---------------------------------------------------------------------------
+
+JETS_DIMS = (16, 64, 32, 32, 5)
+
+
+def init_jets_mlp(key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, len(JETS_DIMS) - 1)
+    return {
+        f"fc_{i+1}": dense_init(ks[i], JETS_DIMS[i], JETS_DIMS[i + 1],
+                                use_bias=True, dtype=dtype)
+        for i in range(len(JETS_DIMS) - 1)
+    }
+
+
+def jets_mlp_forward(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(JETS_DIMS) - 1
+    for i in range(n):
+        x = dense(params[f"fc_{i+1}"], x)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x  # logits (B, 5)
+
+
+# ---------------------------------------------------------------------------
+# Conv helper
+# ---------------------------------------------------------------------------
+
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32) -> Dict:
+    std = 1.0 / (kh * kw * cin) ** 0.5
+    return {
+        "kernel": truncated_normal_init(key, (kh, kw, cin, cout), std, dtype),
+        "bias": jnp.zeros((cout,), dtype),
+    }
+
+
+def conv2d(p: Dict, x: jnp.ndarray, *, stride: int = 1, padding="VALID") -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), p["kernel"].astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return (y + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def maxpool(x, size=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, size, size, 1), "VALID"
+    )
+
+
+# ---------------------------------------------------------------------------
+# SVHN CNN (Aarrestad et al.: conv 16,16,24 + dense 42,64,10; ~14k params)
+# ---------------------------------------------------------------------------
+
+def init_svhn_cnn(key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "conv2d_1": conv_init(ks[0], 3, 3, 3, 16, dtype),
+        "conv2d_2": conv_init(ks[1], 3, 3, 16, 16, dtype),
+        "conv2d_3": conv_init(ks[2], 3, 3, 16, 24, dtype),
+        "fc_1": dense_init(ks[3], 24 * 2 * 2, 42, use_bias=True, dtype=dtype),
+        "fc_2": dense_init(ks[4], 42, 64, use_bias=True, dtype=dtype),
+        "fc_3": dense_init(ks[5], 64, 10, use_bias=True, dtype=dtype),
+    }
+
+
+def svhn_cnn_forward(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, 32, 32, 3) -> logits (B, 10)."""
+    x = maxpool(jax.nn.relu(conv2d(params["conv2d_1"], x)))   # 30->15
+    x = maxpool(jax.nn.relu(conv2d(params["conv2d_2"], x)))   # 13->6
+    x = maxpool(jax.nn.relu(conv2d(params["conv2d_3"], x)))   # 4->2
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(dense(params["fc_1"], x))
+    x = jax.nn.relu(dense(params["fc_2"], x))
+    return dense(params["fc_3"], x)
+
+
+# ---------------------------------------------------------------------------
+# LeNet-like for Fashion-MNIST (paper §IV-D: 60,074 params; 3x3 kernels)
+# ---------------------------------------------------------------------------
+
+def init_lenet(key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "conv2d_1": conv_init(ks[0], 3, 3, 1, 6, dtype),        # 60 params
+        "conv2d_2": conv_init(ks[1], 3, 3, 6, 16, dtype),       # 880 params
+        "fc_1": dense_init(ks[2], 16 * 5 * 5, 120, use_bias=True, dtype=dtype),
+        "fc_2": dense_init(ks[3], 120, 84, use_bias=True, dtype=dtype),
+        "fc_3": dense_init(ks[4], 84, 10, use_bias=True, dtype=dtype),
+    }
+
+
+def lenet_forward(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, 28, 28, 1) -> logits (B, 10)."""
+    x = maxpool(jax.nn.relu(conv2d(params["conv2d_1"], x)))    # 26 -> 13
+    x = maxpool(jax.nn.relu(conv2d(params["conv2d_2"], x)))    # 11 -> 5
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(dense(params["fc_1"], x))
+    x = jax.nn.relu(dense(params["fc_2"], x))
+    return dense(params["fc_3"], x)
+
+
+# Paper Table IV: heterogeneous per-layer hardware configuration for LeNet.
+LENET_LAYER_CFG: List[FpgaLayerCfg] = [
+    FpgaLayerCfg("conv2d_1", rf=1, strategy="latency", precision_bits=18),
+    FpgaLayerCfg("conv2d_2", rf=1, strategy="latency", precision_bits=18),
+    FpgaLayerCfg("fc_1", rf=25, strategy="resource", precision_bits=18),
+    FpgaLayerCfg("fc_2", rf=12, strategy="resource", precision_bits=18),
+    FpgaLayerCfg("fc_3", rf=1, strategy="latency", precision_bits=18),
+]
+
+
+PAPER_MODELS = {
+    "jets-mlp": (init_jets_mlp, jets_mlp_forward, (16,)),
+    "svhn-cnn": (init_svhn_cnn, svhn_cnn_forward, (32, 32, 3)),
+    "lenet-fmnist": (init_lenet, lenet_forward, (28, 28, 1)),
+}
+
+
+def paper_model(name: str):
+    if name not in PAPER_MODELS:
+        raise KeyError(f"unknown paper model {name!r}: {sorted(PAPER_MODELS)}")
+    return PAPER_MODELS[name]

@@ -1,0 +1,55 @@
+"""Feed-forward blocks: gated (SwiGLU) and plain (GELU) MLPs.
+
+Kernels are (in, out) matmuls — the natural targets of resource-aware
+structured pruning.  The "mlp" logical axis puts the hidden dim on the TP
+mesh axis (Megatron column/row parallel pair).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from .layers import dense, dense_init
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def mlp_init(
+    key,
+    d_model: int,
+    d_ff: int,
+    *,
+    gated: bool = True,
+    use_bias: bool = False,
+    dtype=jnp.float32,
+) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, use_bias=use_bias, dtype=dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, use_bias=use_bias, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, use_bias=use_bias, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: Dict, x: jnp.ndarray, *, activation: str = "silu",
+              accum=None, out_seq: str = "seq") -> jnp.ndarray:
+    import jax.numpy as _jnp
+    accum = accum or _jnp.float32
+    up = dense(p["w_up"], x)
+    up = logical_constraint(up, "batch", "seq", "mlp")
+    act = getattr(jax.nn, activation)
+    if "w_gate" in p:
+        gate = dense(p["w_gate"], x)
+        gate = logical_constraint(gate, "batch", "seq", "mlp")
+        h = act(gate) * up
+    else:
+        h = act(up)
+    out = dense(p["w_down"], h.astype(x.dtype), accum=accum)
+    # out_seq="res_seq" under Megatron-SP: the row-parallel partial sums
+    # reduce-scatter straight into the seq-sharded residual (no AR+slice)
+    return logical_constraint(out, "batch", out_seq, "embed")

@@ -1,0 +1,183 @@
+"""Selective SSM (Mamba-1) block, TPU-adapted.
+
+Jamba interleaves Mamba blocks with attention 7:1.  The GPU reference
+implementation is a fused CUDA scan; the TPU-native formulation here is
+*chunked*: the sequence is split into chunks, each chunk runs an exact
+associative scan (log-depth, fully unrolled HLO => correct cost analysis),
+and a small carry (B, d_inner, d_state) links chunks.  When the chunk
+count is small the chunk loop is python-unrolled; above
+``CHUNK_UNROLL_LIMIT`` it becomes a ``lax.scan`` whose body cost is
+re-counted by the roofline supplement machinery (launch/roofline.py).
+
+Recurrence (diagonal A):
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t ⊙ B_t) x_t
+    y_t = C_t · h_t + D ⊙ x_t
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from .layers import dense, dense_init, truncated_normal_init
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "init_mamba_cache",
+           "CHUNK_UNROLL_LIMIT"]
+
+CHUNK_UNROLL_LIMIT = 4  # above this, chunk loop becomes lax.scan (roofline supplement
+                        # counts it); scan bounds live memory to one chunk
+
+
+def mamba_init(
+    key,
+    d_model: int,
+    *,
+    d_inner: Optional[int] = None,
+    d_state: int = 16,
+    d_conv: int = 4,
+    dt_rank: Optional[int] = None,
+    dtype=jnp.float32,
+) -> Dict:
+    d_inner = d_inner or 2 * d_model
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_kernel": truncated_normal_init(ks[1], (d_conv, d_inner), 0.3, dtype),
+        "conv_bias_vec": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, use_bias=True, dtype=dtype),
+        "a_log": jnp.log(a),                       # fp32 SSM scalars (not pruned)
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray, bias: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over seq. x (B,S,di), kernel (K,di).
+
+    Returns (y, new_state) with state = last K-1 inputs for decode."""
+    k = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)      # (B, S+K-1, di)
+    y = sum(
+        xp[:, i: i + x.shape[1]] * kernel[i][None, None].astype(jnp.float32)
+        for i in range(k)
+    )
+    y = y + bias.astype(jnp.float32)
+    new_state = xp[:, -(k - 1):]
+    return y.astype(x.dtype), new_state
+
+
+def _ssm_params(p, x):
+    """x (B,L,di) -> dt (B,L,di), Bm (B,L,N), Cm (B,L,N), all fp32."""
+    d_state = (p["x_proj"]["kernel"].shape[1] - p["dt_proj"]["kernel"].shape[0]) // 2
+    proj = dense(p["x_proj"], x).astype(jnp.float32)
+    dt_rank = p["dt_proj"]["kernel"].shape[0]
+    dt_raw, bm, cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_raw, p["dt_proj"]["kernel"].astype(jnp.float32))
+        + p["dt_proj"]["bias"].astype(jnp.float32)
+    )
+    return dt, bm, cm
+
+
+def _scan_combine(left, right):
+    (al, bl), (ar, br) = left, right
+    return al * ar, bl * ar + br
+
+
+def _ssm_chunk(h0, dt, bm, cm, x, a):
+    """One chunk of the selective scan (exact, log-depth).
+
+    h0 (B,di,N); dt/x (B,L,di); bm/cm (B,L,N); a (di,N) negative.
+    Returns (y (B,L,di) fp32, h_last (B,di,N))."""
+    dta = jnp.exp(dt[..., None] * a[None, None])                    # (B,L,di,N)
+    dbx = (dt * x)[..., None] * bm[:, :, None, :]                   # (B,L,di,N)
+    A_t, B_t = jax.lax.associative_scan(_scan_combine, (dta, dbx), axis=1)
+    h = A_t * h0[:, None] + B_t                                     # (B,L,di,N)
+    y = jnp.einsum("bldn,bln->bld", h, cm)
+    return y, h[:, -1]
+
+
+def mamba_apply(p: Dict, x: jnp.ndarray, *, chunk: int = 256) -> jnp.ndarray:
+    """Training/prefill forward, x (B,S,D) -> (B,S,D)."""
+    b, s, _ = x.shape
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                               # (B,S,di)
+    xi = logical_constraint(xi, "batch", "seq", "mlp")
+    xi, _ = _causal_conv(xi, p["conv_kernel"], p["conv_bias_vec"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    a = -jnp.exp(p["a_log"])                                        # (di,N)
+    di, n = a.shape
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    h = jnp.zeros((b, di, n), jnp.float32)
+
+    if n_chunks <= CHUNK_UNROLL_LIMIT or s % chunk != 0:
+        ys = []
+        for c0 in range(0, s, chunk):
+            c1 = min(c0 + chunk, s)
+            xc = xi[:, c0:c1].astype(jnp.float32)
+            dt, bm, cm = _ssm_params(p, xi[:, c0:c1])
+            y, h = _ssm_chunk(h, dt, bm, cm, xc, a)
+            ys.append(y)
+        y = jnp.concatenate(ys, axis=1)
+    else:
+        xr = xi.reshape(b, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+        @jax.checkpoint
+        def body(hc, xc):
+            # checkpointed: lax.scan otherwise saves every chunk's scan
+            # intermediates for backward — 1.2 TB/dev measured on jamba
+            # (EXPERIMENTS.md §Perf J1/J2); recompute costs ~1 extra fwd
+            xcf = xc.astype(jnp.float32)
+            dt, bm, cm = _ssm_params(p, xc)
+            y, hn = _ssm_chunk(hc, dt, bm, cm, xcf, a)
+            return hn, y
+
+        h, yr = jax.lax.scan(body, h, xr)
+        y = yr.transpose(1, 0, 2, 3).reshape(b, s, di)
+
+    y = y + xi.astype(jnp.float32) * p["d_skip"][None, None]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return dense(p["out_proj"], y.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(batch: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Dict, x: jnp.ndarray, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x (B,1,D) -> (y (B,1,D), new cache)."""
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                               # (B,1,di)
+    xi, conv_state = _causal_conv(
+        xi, p["conv_kernel"], p["conv_bias_vec"], state=cache["conv"].astype(xi.dtype)
+    )
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    dt, bm, cm = _ssm_params(p, xi)                                 # (B,1,·)
+    a = -jnp.exp(p["a_log"])
+    dta = jnp.exp(dt[..., None] * a[None, None])                    # (B,1,di,N)
+    dbx = (dt * xi.astype(jnp.float32))[..., None] * bm[:, :, None, :]
+    h = dta[:, 0] * cache["ssm"] + dbx[:, 0]                        # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, cm[:, 0])[:, None]              # (B,1,di)
+    y = y + xi.astype(jnp.float32) * p["d_skip"][None, None]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(x.dtype))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,470 @@
+"""Composable decoder / encoder-decoder stack covering all assigned archs.
+
+A model is a list of ``LayerSpec``s (mixer + mlp per layer) generated from
+``ModelConfig`` patterns:
+
+  dense LM        mixer=attn,  mlp=dense
+  MoE LM          mixer=attn,  mlp=moe
+  jamba           mixer cycles mamba/attn (7:1), mlp cycles dense/moe
+  xlstm           mixer cycles mlstm/slstm (7:1), mlp=none
+  whisper         encoder (bidir attn+dense) + decoder (causal+cross+dense)
+  qwen2-vl        dense LM + M-RoPE + patch-embed stub
+
+Layers are python-unrolled (accurate XLA cost analysis; DESIGN.md §4) and
+optionally rematerialized per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import xlstm as xlstm_mod
+from .attention import (
+    attention_apply,
+    attention_decode,
+    attention_init,
+    init_kv_cache,
+)
+from .ffn import mlp_apply, mlp_init
+from .layers import (
+    dense,
+    dense_init,
+    embed_init,
+    embed_lookup,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+    unembed_logits,
+)
+from .mamba import init_mamba_cache, mamba_apply, mamba_decode, mamba_init
+from .moe import moe_apply, moe_decode, moe_init
+from .moe_alltoall import alltoall_available, moe_alltoall_apply
+from .xlstm import (
+    init_mlstm_cache,
+    init_slstm_cache,
+    mlstm_apply,
+    mlstm_decode,
+    mlstm_init,
+    slstm_apply,
+    slstm_decode,
+    slstm_init,
+)
+
+__all__ = [
+    "LayerSpec", "layer_specs", "init_params", "lm_forward", "lm_decode",
+    "init_caches", "encoder_forward", "encode_kv_caches", "cross_entropy_loss",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                 # attn | mamba | mlstm | slstm | none
+    mlp: str                   # dense | moe | none
+    cross_attn: bool = False
+    causal: bool = True
+    use_rope: bool = True
+
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    mix = cfg.mixer_pattern or ("attn",)
+    mlp = cfg.mlp_pattern or ("dense",)
+    return [
+        LayerSpec(
+            mixer=mix[i % len(mix)],
+            mlp=mlp[i % len(mlp)],
+            cross_attn=False,
+            causal=True,
+            use_rope=cfg.use_rope,
+        )
+        for i in range(cfg.n_layers)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _accum(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.row_accum_dtype == "bfloat16" else jnp.float32
+
+
+def _out_seq(cfg: ModelConfig) -> str:
+    return "res_seq" if cfg.seq_sharded_acts else "seq"
+
+
+def _residual(cfg: ModelConfig, x):
+    """Megatron-SP: residual stream sharded on seq over the TP axis when
+    cfg.seq_sharded_acts — converts the per-layer TP all-reduces into
+    all-gather + reduce-scatter pairs (half the wire bytes) and shrinks
+    every residual/norm op 16x (EXPERIMENTS.md §Perf)."""
+    if cfg.seq_sharded_acts:
+        return logical_constraint(x, "batch", "res_seq", "embed")
+    return x
+
+
+def _norm_init(cfg: ModelConfig):
+    return layernorm_init(cfg.d_model, cfg.dtype) if cfg.norm_type == "layernorm" \
+        else rmsnorm_init(cfg.d_model, cfg.dtype)
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    return layernorm(p, x) if cfg.norm_type == "layernorm" else rmsnorm(p, x)
+
+
+def _init_mixer(key, spec: LayerSpec, cfg: ModelConfig) -> Dict:
+    if spec.mixer == "attn":
+        p = {
+            "attn": attention_init(
+                key, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim_(),
+                qkv_bias=cfg.qkv_bias, dtype=cfg.dtype,
+            )
+        }
+        if spec.cross_attn:
+            k2 = jax.random.fold_in(key, 1)
+            p["cross"] = attention_init(
+                k2, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim_(),
+                qkv_bias=cfg.qkv_bias, dtype=cfg.dtype,
+            )
+            p["cross_norm"] = _norm_init(cfg)
+        return p
+    if spec.mixer == "mamba":
+        return {"mamba": mamba_init(
+            key, cfg.d_model, d_state=cfg.d_state, d_conv=cfg.d_conv, dtype=cfg.dtype)}
+    if spec.mixer == "mlstm":
+        return {"mlstm": mlstm_init(
+            key, cfg.d_model, cfg.n_heads, proj_factor=cfg.mlstm_proj_factor, dtype=cfg.dtype)}
+    if spec.mixer == "slstm":
+        return {"slstm": slstm_init(key, cfg.d_model, cfg.n_heads, dtype=cfg.dtype)}
+    if spec.mixer == "none":
+        return {}
+    raise ValueError(f"unknown mixer {spec.mixer}")
+
+
+def _init_mlp(key, spec: LayerSpec, cfg: ModelConfig) -> Dict:
+    if spec.mlp == "dense":
+        return {"mlp": mlp_init(
+            key, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, dtype=cfg.dtype)}
+    if spec.mlp == "moe":
+        return {"moe": moe_init(
+            key, cfg.d_model, cfg.d_ff, cfg.moe_experts, gated=cfg.gated_mlp,
+            dtype=cfg.dtype)}
+    if spec.mlp == "none":
+        return {}
+    raise ValueError(f"unknown mlp {spec.mlp}")
+
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> Dict:
+    km, kf = jax.random.split(key)
+    p: Dict[str, Any] = {"pre_norm": _norm_init(cfg)}
+    p.update(_init_mixer(km, spec, cfg))
+    if spec.mlp != "none":
+        p["post_norm"] = _norm_init(cfg)
+        p.update(_init_mlp(kf, spec, cfg))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "layers": [
+            _init_layer(keys[2 + i], spec, cfg)
+            for i, spec in enumerate(layer_specs(cfg))
+        ],
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, cfg.dtype)
+    if cfg.enc_layers > 0:  # encoder-decoder (whisper)
+        ekeys = jax.random.split(keys[-1], cfg.enc_layers + 1)
+        enc_spec = LayerSpec(mixer="attn", mlp="dense", causal=False, use_rope=False)
+        params["encoder"] = {
+            "layers": [_init_layer(ekeys[i], enc_spec, cfg) for i in range(cfg.enc_layers)],
+            "final_norm": _norm_init(cfg),
+        }
+        # decoder layers gain cross-attention
+        dec_spec = LayerSpec(mixer="attn", mlp="dense", cross_attn=True,
+                             use_rope=cfg.use_rope)
+        params["layers"] = [
+            _init_layer(keys[2 + i], dec_spec, cfg) for i in range(cfg.n_layers)
+        ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(
+    p: Dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
+    positions, enc_out: Optional[jnp.ndarray],
+) -> jnp.ndarray:
+    if spec.mixer == "attn":
+        h = attention_apply(
+            p["attn"], x,
+            num_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.head_dim_(),
+            positions=positions, causal=spec.causal, window=cfg.window,
+            chunk=cfg.attn_chunk, rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections, use_rope=spec.use_rope,
+            accum=_accum(cfg), out_seq=_out_seq(cfg),
+        )
+        if spec.cross_attn and enc_out is not None:
+            xc = _norm_apply(cfg, p["cross_norm"], x + h)
+            hc = attention_apply(
+                p["cross"], xc,
+                num_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.head_dim_(),
+                causal=False, chunk=cfg.attn_chunk, kv_input=enc_out, use_rope=False,
+            )
+            h = h + hc
+        return h
+    if spec.mixer == "mamba":
+        return mamba_apply(p["mamba"], x, chunk=cfg.ssm_chunk)
+    if spec.mixer == "mlstm":
+        return mlstm_apply(p["mlstm"], x, num_heads=cfg.n_heads, chunk=cfg.ssm_chunk)
+    if spec.mixer == "slstm":
+        return slstm_apply(p["slstm"], x, num_heads=cfg.n_heads)
+    if spec.mixer == "none":
+        return jnp.zeros_like(x)
+    raise ValueError(spec.mixer)
+
+
+def _apply_layer(
+    p: Dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
+    positions, enc_out,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm residual layer. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _apply_mixer(p, spec, cfg, _norm_apply(cfg, p["pre_norm"], x), positions, enc_out)
+    x = _residual(cfg, x + h)
+    if spec.mlp == "dense":
+        x = x + mlp_apply(p["mlp"], _norm_apply(cfg, p["post_norm"], x),
+                          activation=cfg.activation, accum=_accum(cfg),
+                          out_seq=_out_seq(cfg))
+        x = _residual(cfg, x)
+    elif spec.mlp == "moe":
+        xn = _norm_apply(cfg, p["post_norm"], x)
+        if cfg.moe_impl == "alltoall" and alltoall_available(cfg.moe_experts):
+            y, aux = moe_alltoall_apply(
+                p["moe"], xn,
+                num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor, activation=cfg.activation,
+            )
+        else:
+            y, aux = moe_apply(
+                p["moe"], xn,
+                num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor, activation=cfg.activation,
+            )
+        x = _residual(cfg, x + y)
+    return x, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy, static_argnums=())
+
+
+def encoder_forward(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend, per assignment).  frames (B, T, D)."""
+    x = frames.astype(cfg.adtype)
+    pos = sinusoidal_positions(frames.shape[1], cfg.d_model).astype(cfg.adtype)
+    x = x + pos[None]
+    spec = LayerSpec(mixer="attn", mlp="dense", causal=False, use_rope=False)
+    for lp in params["encoder"]["layers"]:
+        fn = _remat_wrap(
+            lambda p, y: _apply_layer(p, spec, cfg, y, None, None)[0], cfg)
+        x = fn(lp, x)
+    return _norm_apply(cfg, params["encoder"]["final_norm"], x)
+
+
+def lm_forward(
+    params: Dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Forward to fp32 logits.  batch keys: tokens (B,S) [, positions,
+    patch_embeds, frames]."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, dtype=cfg.adtype)
+
+    if cfg.num_patches > 0 and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.adtype)     # (B, P, D)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+
+    positions = batch.get("positions")
+    if positions is None:
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, 3))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    enc_out = None
+    if cfg.enc_layers > 0:
+        enc_out = encoder_forward(params, batch["frames"], cfg)
+
+    x = logical_constraint(x, "batch", "seq", "embed")
+    aux_total = jnp.zeros((), jnp.float32)
+    specs = layer_specs(cfg) if cfg.enc_layers == 0 else [
+        LayerSpec(mixer="attn", mlp="dense", cross_attn=True, use_rope=cfg.use_rope)
+    ] * cfg.n_layers
+    for lp, spec in zip(params["layers"], specs):
+        fn = _remat_wrap(
+            functools.partial(_apply_layer, spec=spec, cfg=cfg), cfg)
+        x, aux = fn(lp, x=x, positions=positions, enc_out=enc_out)
+        aux_total = aux_total + aux
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed_logits(head, x)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return logits, {"moe_aux": aux_total}
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, *, z_loss: float = 1e-4
+) -> jnp.ndarray:
+    """Token-mean xent over vocab-sharded fp32 logits + z-loss.
+
+    The label logit is extracted with a one-hot reduction, NOT
+    take_along_axis: a gather over the vocab-sharded dim would all-gather
+    the full logits (10 GB/step/device at qwen scale — measured in §Perf);
+    the one-hot multiply-reduce keeps the vocab dim sharded and lowers to a
+    partial sum + tiny all-reduce."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, logits.shape[-1]), 2
+    )
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve path)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+                ) -> List[Dict]:
+    caches: List[Dict] = []
+    specs = layer_specs(cfg)
+    for spec in specs:
+        if cfg.enc_layers > 0:
+            spec = LayerSpec(mixer="attn", mlp="dense", cross_attn=True,
+                             use_rope=cfg.use_rope)
+        if spec.mixer == "attn":
+            alloc = max_len if cfg.window is None else min(max_len, cfg.window)
+            c = init_kv_cache(batch, alloc, cfg.kv_heads, cfg.head_dim_(), dtype)
+            if cfg.enc_layers > 0:
+                c["cross_k"] = jnp.zeros(
+                    (batch, cfg.enc_frames, cfg.kv_heads, cfg.head_dim_()), dtype)
+                c["cross_v"] = jnp.zeros_like(c["cross_k"])
+            caches.append(c)
+        elif spec.mixer == "mamba":
+            caches.append(init_mamba_cache(batch, 2 * cfg.d_model, cfg.d_state,
+                                           cfg.d_conv, dtype))
+        elif spec.mixer == "mlstm":
+            d_in = int(cfg.mlstm_proj_factor * cfg.d_model)
+            d_in -= d_in % cfg.n_heads
+            caches.append(init_mlstm_cache(batch, cfg.n_heads, d_in // cfg.n_heads))
+        elif spec.mixer == "slstm":
+            caches.append(init_slstm_cache(batch, cfg.d_model))
+        else:
+            caches.append({})
+    return caches
+
+
+def encode_kv_caches(params: Dict, enc_out: jnp.ndarray, cfg: ModelConfig,
+                     caches: List[Dict]) -> List[Dict]:
+    """Precompute encoder K/V for decoder cross-attention (whisper)."""
+    from .attention import _split_heads  # local: private helper
+
+    for lp, c in zip(params["layers"], caches):
+        k = _split_heads(dense(lp["cross"]["wk"], enc_out), cfg.kv_heads)
+        v = _split_heads(dense(lp["cross"]["wv"], enc_out), cfg.kv_heads)
+        c["cross_k"] = k.astype(c["cross_k"].dtype)
+        c["cross_v"] = v.astype(c["cross_v"].dtype)
+    return caches
+
+
+def lm_decode(
+    params: Dict,
+    caches: List[Dict],
+    batch: Dict[str, jnp.ndarray],
+    cache_len: jnp.ndarray,
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, List[Dict]]:
+    """One-token decode. batch["tokens"] (B, 1). Returns (logits, caches)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = embed_lookup(params["embed"], tokens, dtype=cfg.adtype)
+    x = logical_constraint(x, "batch", None, "embed")
+
+    specs = layer_specs(cfg)
+    if cfg.enc_layers > 0:
+        specs = [LayerSpec(mixer="attn", mlp="dense", cross_attn=True,
+                           use_rope=cfg.use_rope)] * cfg.n_layers
+
+    new_caches: List[Dict] = []
+    for lp, spec, cache in zip(params["layers"], specs, caches):
+        h_in = _norm_apply(cfg, lp["pre_norm"], x)
+        if spec.mixer == "attn":
+            h, cache2 = attention_decode(
+                lp["attn"], h_in, {"k": cache["k"], "v": cache["v"]}, cache_len,
+                num_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                head_dim=cfg.head_dim_(), window=cfg.window,
+                rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+            )
+            cache = {**cache, **cache2}
+            if spec.cross_attn:
+                xc = _norm_apply(cfg, lp["cross_norm"], x + h)
+                enc_len = jnp.asarray(cache["cross_k"].shape[1], jnp.int32)
+                hc, _ = attention_decode(
+                    lp["cross"], xc,
+                    {"k": cache["cross_k"], "v": cache["cross_v"]}, enc_len,
+                    num_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                    head_dim=cfg.head_dim_(), update_cache=False,
+                )
+                h = h + hc
+        elif spec.mixer == "mamba":
+            h, cache = mamba_decode(lp["mamba"], h_in, cache)
+        elif spec.mixer == "mlstm":
+            h, cache = mlstm_decode(lp["mlstm"], h_in, cache, num_heads=cfg.n_heads)
+        elif spec.mixer == "slstm":
+            h, cache = slstm_decode(lp["slstm"], h_in, cache, num_heads=cfg.n_heads)
+        else:
+            h = jnp.zeros_like(x)
+        x = x + h
+        if spec.mlp == "dense":
+            x = x + mlp_apply(lp["mlp"], _norm_apply(cfg, lp["post_norm"], x),
+                              activation=cfg.activation)
+        elif spec.mlp == "moe":
+            y, _ = moe_decode(lp["moe"], _norm_apply(cfg, lp["post_norm"], x),
+                              num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                              activation=cfg.activation)
+            x = x + y
+        new_caches.append(cache)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed_logits(head, x)
+    return logits, new_caches

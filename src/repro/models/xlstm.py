@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential), after Beck et al. 2024 (arXiv:2405.04517).
+
+TPU adaptation:
+* mLSTM trains in *chunked parallel* form — intra-chunk quadratic
+  (MXU matmuls with stabilized exponential-gating decay matrix), inter-chunk
+  recurrent state (C, n, m) carried across chunks.  Chunks are python-
+  unrolled below ``CHUNK_UNROLL_LIMIT`` (accurate XLA cost analysis),
+  ``lax.scan`` + roofline supplement above.
+* sLSTM is inherently sequential (gates depend on h_{t-1} through the
+  block-diagonal recurrent matrix R).  The input projections Wx are hoisted
+  out of the scan (one big MXU matmul); the scan body only does the
+  per-head (dh,4dh) recurrent matmul + elementwise gating.  Its trip count
+  is reported to the roofline supplement machinery.
+
+Both use exponential gating with the max-stabilizer m (paper eq. group 15
+/ 24): numerically exact in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from .layers import dense, dense_init, layernorm, layernorm_init, truncated_normal_init
+
+__all__ = [
+    "mlstm_init", "mlstm_apply", "mlstm_decode", "init_mlstm_cache",
+    "slstm_init", "slstm_apply", "slstm_decode", "init_slstm_cache",
+    "CHUNK_UNROLL_LIMIT",
+]
+
+CHUNK_UNROLL_LIMIT = 4
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(key, d_model: int, num_heads: int, *, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> Dict:
+    d_in = int(proj_factor * d_model)
+    d_in -= d_in % num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d_model, d_in, dtype=dtype),
+        "gate_proj": dense_init(ks[1], d_model, d_in, dtype=dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype=dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype=dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype=dtype),
+        "wif": dense_init(ks[5], d_in, 2 * num_heads, use_bias=True, dtype=dtype),
+        "down_proj": dense_init(ks[6], d_in, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(carry, q, k, v, ig, fg):
+    """One chunk of chunked mLSTM.
+
+    carry: (C (B,H,dk,dv), n (B,H,dk), m (B,H))
+    q,k,v (B,H,L,dh) fp32; ig,fg (B,H,L) raw gate pre-activations.
+    Returns (new_carry, h (B,H,L,dh))."""
+    C_p, n_p, m_p = carry
+    b, h, l, dh = q.shape
+    logf = jax.nn.log_sigmoid(fg)                       # (B,H,L)
+    F = jnp.cumsum(logf, axis=-1)                       # decay chunk-start->t
+    F_total = F[..., -1]
+
+    # stabilizers
+    d_intra = F[..., :, None] - F[..., None, :] + ig[..., None, :]  # (B,H,L,L)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    d_intra = jnp.where(tri[None, None], d_intra, -jnp.inf)
+    m_intra = jnp.max(d_intra, axis=-1)                 # (B,H,L)
+    m_inter = m_p[..., None] + F                        # (B,H,L)
+    m_t = jnp.maximum(m_inter, m_intra)
+    m_t = jnp.maximum(m_t, -1e30)
+
+    scale = 1.0 / math.sqrt(dh)
+    s_intra = jnp.einsum("bhld,bhtd->bhlt", q, k) * scale
+    w_intra = s_intra * jnp.exp(d_intra - m_t[..., None])           # (B,H,L,L)
+    inter_coeff = jnp.exp(m_inter - m_t)                            # (B,H,L)
+
+    numer = (
+        jnp.einsum("bhlt,bhtd->bhld", w_intra, v)
+        + inter_coeff[..., None] * jnp.einsum("bhld,bhdv->bhlv", q * scale, C_p)
+    )
+    denom = (
+        jnp.sum(w_intra, axis=-1)
+        + inter_coeff * jnp.einsum("bhld,bhd->bhl", q * scale, n_p)
+    )
+    hidden = numer / jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))[..., None]
+
+    # state update to chunk end
+    decay_to_end = F_total[..., None] - F + ig                      # (B,H,L)
+    m_new = jnp.maximum(m_p + F_total, jnp.max(decay_to_end, axis=-1))
+    kv = jnp.einsum(
+        "bhtd,bhtv->bhdv", k * jnp.exp(decay_to_end - m_new[..., None])[..., None], v
+    )
+    C_new = jnp.exp(m_p + F_total - m_new)[..., None, None] * C_p + kv
+    n_new = (
+        jnp.exp(m_p + F_total - m_new)[..., None] * n_p
+        + jnp.sum(k * jnp.exp(decay_to_end - m_new[..., None])[..., None], axis=2)
+    )
+    return (C_new, n_new, m_new), hidden
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+
+
+def mlstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int,
+                chunk: int = 256) -> jnp.ndarray:
+    b, s, _ = x.shape
+    xin = dense(p["up_proj"], x)
+    gate = dense(p["gate_proj"], x)
+    d_in = xin.shape[-1]
+    dh = d_in // num_heads
+    q = _heads(dense(p["wq"], xin), num_heads).astype(jnp.float32)
+    k = _heads(dense(p["wk"], xin), num_heads).astype(jnp.float32)
+    v = _heads(dense(p["wv"], xin), num_heads).astype(jnp.float32)
+    q = logical_constraint(q, "batch", "heads", "seq", None)
+    k = logical_constraint(k, "batch", "heads", "seq", None)
+    v = logical_constraint(v, "batch", "heads", "seq", None)
+    gif = dense(p["wif"], xin).astype(jnp.float32)                  # (B,S,2H)
+    ig, fg = jnp.split(gif, 2, axis=-1)
+    ig = ig.transpose(0, 2, 1)                                      # (B,H,S)
+    fg = fg.transpose(0, 2, 1)
+
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    carry = (
+        jnp.zeros((b, num_heads, dh, dh), jnp.float32),
+        jnp.zeros((b, num_heads, dh), jnp.float32),
+        jnp.full((b, num_heads), -1e30, jnp.float32),
+    )
+    if n_chunks <= CHUNK_UNROLL_LIMIT or s % chunk != 0:
+        hs = []
+        for c0 in range(0, s, chunk):
+            c1 = min(c0 + chunk, s)
+            carry, hid = _mlstm_chunk(
+                carry, q[:, :, c0:c1], k[:, :, c0:c1], v[:, :, c0:c1],
+                ig[:, :, c0:c1], fg[:, :, c0:c1],
+            )
+            hs.append(hid)
+        hid = jnp.concatenate(hs, axis=2)                           # (B,H,S,dh)
+    else:
+        @jax.checkpoint
+        def body(c, args):
+            qc, kc, vc, igc, fgc = args
+            c, hid = _mlstm_chunk(c, qc, kc, vc, igc, fgc)
+            return c, hid
+
+        split = lambda t, ax: jnp.stack(jnp.split(t, n_chunks, axis=ax))
+        _, hr = jax.lax.scan(
+            body, carry,
+            (split(q, 2), split(k, 2), split(v, 2), split(ig, 2), split(fg, 2)),
+        )
+        hid = hr.transpose(1, 2, 0, 3, 4).reshape(b, num_heads, s, dh)
+
+    out = hid.transpose(0, 2, 1, 3).reshape(b, s, d_in).astype(x.dtype)
+    out = out * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down_proj"], out)
+
+
+def init_mlstm_cache(batch: int, num_heads: int, head_dim: int) -> Dict:
+    return {
+        "C": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Dict, x: jnp.ndarray, cache: Dict, *, num_heads: int
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step (exact)."""
+    b = x.shape[0]
+    xin = dense(p["up_proj"], x)
+    gate = dense(p["gate_proj"], x)
+    d_in = xin.shape[-1]
+    dh = d_in // num_heads
+    q = _heads(dense(p["wq"], xin), num_heads)[:, :, 0].astype(jnp.float32)  # (B,H,dh)
+    k = _heads(dense(p["wk"], xin), num_heads)[:, :, 0].astype(jnp.float32)
+    v = _heads(dense(p["wv"], xin), num_heads)[:, :, 0].astype(jnp.float32)
+    gif = dense(p["wif"], xin).astype(jnp.float32)[:, 0]            # (B,2H)
+    ig, fg = jnp.split(gif, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(fg)
+
+    m_new = jnp.maximum(cache["m"] + logf, ig)
+    cf = jnp.exp(cache["m"] + logf - m_new)
+    ci = jnp.exp(ig - m_new)
+    scale = 1.0 / math.sqrt(dh)
+    C = cf[..., None, None] * cache["C"] + ci[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = cf[..., None] * cache["n"] + ci[..., None] * k
+    numer = jnp.einsum("bhd,bhdv->bhv", q * scale, C)
+    denom = jnp.einsum("bhd,bhd->bh", q * scale, n)
+    h = numer / jnp.maximum(jnp.abs(denom), jnp.exp(-m_new))[..., None]
+    out = h.reshape(b, d_in)[:, None].astype(x.dtype)
+    out = out * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down_proj"], out), {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(key, d_model: int, num_heads: int, *, ff_factor: float = 4 / 3,
+               dtype=jnp.float32) -> Dict:
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 4)
+    d_ff = int(ff_factor * d_model)
+    d_ff += (-d_ff) % 128
+    return {
+        # fused input projections for z, i, f, o
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, use_bias=True, dtype=dtype),
+        # block-diagonal recurrent weights per head (H, dh, 4*dh)
+        "r_rec": truncated_normal_init(ks[1], (num_heads, dh, 4 * dh),
+                                       1.0 / math.sqrt(dh), dtype),
+        "up": dense_init(ks[2], d_model, d_ff, dtype=dtype),
+        "down": dense_init(ks[3], d_ff, d_model, dtype=dtype),
+    }
+
+
+def _slstm_step(state, wx_t, r_rec, num_heads):
+    """state = (c, n, h, m) each (B, d) fp32; wx_t (B, 4d) fp32."""
+    c, n, h, m = state
+    b, d = h.shape
+    dh = d // num_heads
+    hh = h.reshape(b, num_heads, dh)
+    rh = jnp.einsum("bhd,hde->bhe", hh, r_rec.astype(jnp.float32))  # (B,H,4dh)
+    rh = rh.reshape(b, num_heads, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    pre = wx_t + rh
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    logf = jax.nn.log_sigmoid(ft)                 # sigmoid-forget variant (stable)
+    m_new = jnp.maximum(logf + m, it)
+    cf = jnp.exp(logf + m - m_new)
+    ci = jnp.exp(it - m_new)
+    c_new = cf * c + ci * z
+    n_new = cf * n + ci
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int) -> jnp.ndarray:
+    """Sequential sLSTM over seq; scan body is recurrent-matmul only."""
+    b, s, d = x.shape
+    wx = dense(p["w_in"], x).astype(jnp.float32)                    # (B,S,4d)
+    state = init_slstm_cache(b, d)
+    state = tuple(state[k] for k in ("c", "n", "h", "m"))
+
+    def body(st, wx_t):
+        return _slstm_step(st, wx_t, p["r_rec"], num_heads)
+
+    _, hs = jax.lax.scan(body, state, wx.transpose(1, 0, 2))        # (S,B,d)
+    out = hs.transpose(1, 0, 2).astype(x.dtype)
+    h2 = dense(p["up"], out)
+    h2 = jax.nn.gelu(h2.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], h2)
+
+
+def init_slstm_cache(batch: int, d_model: int) -> Dict:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": jnp.full((batch, d_model), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: Dict, x: jnp.ndarray, cache: Dict, *, num_heads: int
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    b, s, d = x.shape
+    wx = dense(p["w_in"], x).astype(jnp.float32)[:, 0]              # (B,4d)
+    state = tuple(cache[k] for k in ("c", "n", "h", "m"))
+    state, h = _slstm_step(state, wx, p["r_rec"], num_heads)
+    out = h[:, None].astype(x.dtype)
+    h2 = dense(p["up"], out)
+    h2 = jax.nn.gelu(h2.astype(jnp.float32)).astype(x.dtype)
+    out = dense(p["down"], h2)
+    c, n, hh, m = state
+    return out, {"c": c, "n": n, "h": hh, "m": m}

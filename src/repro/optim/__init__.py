@@ -1,0 +1,10 @@
+"""Optimization substrate: AdamW (masked), schedules, grad compression."""
+from .adamw import AdamWConfig, adamw_update, clip_by_global_norm, global_norm, init_opt_state
+from .compression import compressed_psum, compressed_psum_tree, init_error_buffers
+from .schedule import constant_lr, linear_decay, warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "clip_by_global_norm", "global_norm",
+    "init_opt_state", "compressed_psum", "compressed_psum_tree",
+    "init_error_buffers", "constant_lr", "linear_decay", "warmup_cosine",
+]

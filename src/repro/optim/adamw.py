@@ -1,0 +1,118 @@
+"""AdamW with fp32 state, optional fp32 master weights, and mask-aware
+updates (pruned structures receive no updates and stay exactly zero).
+
+No optax offline — this is a from-scratch, pytree-native implementation.
+State layout (a pytree mirroring params):
+
+    {"m": fp32, "v": fp32, "master": fp32 (optional), "count": ()}
+
+Masking semantics for iterative pruning (paper Alg. 2 fine-tuning): the
+forward uses ``params * mask``; gradients are therefore already
+mask-scaled, but weight decay and Adam moments would drift pruned weights
+off zero — so the update itself is re-masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    use_master: bool = True     # fp32 master copies for bf16 params
+
+
+def _is_leaf(x):
+    return x is None
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    zeros32 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {
+        "m": zeros32,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: Dict[str, Any],
+    cfg: AdamWConfig,
+    lr: jnp.ndarray,
+    masks: Optional[Mapping[str, Any]] = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """One AdamW step. Returns (new_params, new_state)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v, master, mask):
+        gf = g.astype(jnp.float32)
+        if mask is not None:
+            gf = gf * mask.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mh = m / b1c
+        vh = v / b2c
+        base = master if master is not None else p.astype(jnp.float32)
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * base
+        new_master = base - lr * step
+        if mask is not None:
+            new_master = new_master * mask.astype(jnp.float32)
+            m = m * mask.astype(jnp.float32)
+            v = v * mask.astype(jnp.float32)
+        return new_master.astype(p.dtype), m, v, new_master
+
+    mask_tree = masks if masks is not None else jax.tree.map(lambda _: None, params)
+    master_tree = state.get("master", jax.tree.map(lambda _: None, params))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(master_tree)
+    flat_mask = treedef.flatten_up_to(mask_tree) if masks is not None else [None] * len(flat_p)
+
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for p, g, m, v, ma, mk in zip(flat_p, flat_g, flat_m, flat_v, flat_ma, flat_mask):
+        np_, nm, nv, nma = upd(p, g, m, v, ma, mk)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+        new_master.append(nma)
+
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "count": count,
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree.unflatten(treedef, new_master)
+    return jax.tree.unflatten(treedef, new_p), new_state

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant_lr", "linear_decay"]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * peak + (1 - final_frac) * peak * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def linear_decay(peak: float, total_steps: int) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return peak * (1.0 - t)
+
+    return fn

@@ -1,0 +1,99 @@
+"""Property + oracle tests for the MDKP solvers (paper Eq. 5-8)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solve_brute, solve_dp, solve_greedy, solve_mdkp
+
+
+def _rand_instance(draw, n_max=12, m_max=3):
+    n = draw(st.integers(1, n_max))
+    m = draw(st.integers(1, m_max))
+    values = draw(st.lists(st.floats(0.0, 1.0), min_size=n, max_size=n))
+    weights = [
+        draw(st.lists(st.floats(0.01, 1.0), min_size=n, max_size=n))
+        for _ in range(m)
+    ]
+    frac = draw(st.floats(0.1, 0.9))
+    w = np.array(weights)
+    c = w.sum(axis=1) * frac
+    return np.array(values), w, c
+
+
+@st.composite
+def instances(draw):
+    return _rand_instance(draw)
+
+
+@given(instances())
+@settings(max_examples=80, deadline=None)
+def test_mdkp_always_feasible(inst):
+    v, w, c = inst
+    r = solve_mdkp(v, w, c)
+    assert np.all(w @ r.x <= c + 1e-6), "capacity violated"
+    assert r.value == pytest.approx(float(v @ r.x))
+
+
+@given(instances())
+@settings(max_examples=40, deadline=None)
+def test_mdkp_near_optimal_vs_brute(inst):
+    v, w, c = inst
+    exact = solve_brute(v, w, c)
+    approx = solve_mdkp(v, w, c)
+    assert approx.value >= 0.9 * exact.value - 1e-9
+
+
+@given(st.integers(1, 16), st.floats(0.1, 0.9))
+@settings(max_examples=40, deadline=None)
+def test_uniform_weights_is_topk(n, frac):
+    rng = np.random.default_rng(n)
+    v = rng.uniform(0, 1, n)
+    w = np.ones((2, n))
+    k = int(np.floor(n * frac))
+    r = solve_mdkp(v, w, np.array([k, k], dtype=float))
+    assert r.method == "mdkp-topk"
+    expected = np.zeros(n, bool)
+    expected[np.argsort(-v, kind="stable")[:k]] = True
+    assert np.array_equal(r.x, expected)
+
+
+def test_dp_exact_integer():
+    v = np.array([60.0, 100.0, 120.0])
+    w = np.array([[10.0, 20.0, 30.0]])
+    r = solve_dp(v, w, np.array([50.0]))
+    assert r.value == 220.0
+    assert r.x.tolist() == [False, True, True]
+
+
+@given(instances())
+@settings(max_examples=30, deadline=None)
+def test_dp_matches_brute_1d(inst):
+    v, w, c = inst
+    r_dp = solve_dp(v, w[:1], c[:1])
+    r_b = solve_brute(v, w[:1], c[:1])
+    assert np.all(w[:1] @ r_dp.x <= c[:1] + 1e-6)
+    assert r_dp.value >= 0.95 * r_b.value - 1e-9
+
+
+def test_greedy_zero_capacity():
+    v = np.array([1.0, 2.0])
+    w = np.ones((1, 2))
+    r = solve_mdkp(v, w, np.array([0.0]))
+    assert not r.x.any()
+
+
+def test_heterogeneous_lenet_case():
+    """Paper Table IV/V: conv structures [1,0], fc structures [2,1] —
+    one global knapsack trades them off correctly."""
+    # 4 conv structures (cheap on memory) + 4 fc structures (expensive)
+    v = np.array([0.9, 0.8, 0.1, 0.05, 0.85, 0.7, 0.2, 0.1])
+    w = np.array([
+        [1, 1, 1, 1, 2, 2, 2, 2],     # DSP/MXU
+        [0, 0, 0, 0, 1, 1, 1, 1],     # BRAM/HBM
+    ], dtype=float)
+    c = np.array([6.0, 2.0])
+    r = solve_mdkp(v, w, c)
+    assert np.all(w @ r.x <= c + 1e-9)
+    # the two high-value fc structures fit the BRAM budget exactly
+    assert r.x[4] and r.x[5]
+    assert r.x[0] and r.x[1]

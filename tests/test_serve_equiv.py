@@ -1,0 +1,129 @@
+"""Decode-path equivalence: incremental decoding must reproduce the
+teacher-forced forward logits (validates rope positions, cache mechanics,
+GQA grouping, SWA windows, SSM recurrences, xLSTM state updates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_smoke
+from repro.models import init_caches, init_params, lm_decode, lm_forward
+from repro.models.attention import chunked_causal_attention, full_attention
+from repro.models.mamba import mamba_apply, mamba_decode, mamba_init, init_mamba_cache
+from repro.models.xlstm import (
+    init_mlstm_cache, init_slstm_cache,
+    mlstm_apply, mlstm_decode, slstm_apply, slstm_decode, mlstm_init, slstm_init,
+)
+
+ARCHS_EQ = ["qwen1.5-0.5b", "mixtral-8x7b", "jamba-v0.1-52b", "xlstm-350m",
+            "granite-moe-1b-a400m"]
+
+
+@pytest.mark.parametrize("arch", ARCHS_EQ)
+def test_prefill_vs_incremental(arch):
+    cfg = make_smoke(get_config(arch))
+    if cfg.moe_experts:
+        # token-choice capacity routing differs batched-vs-single-token by
+        # design (capacity drops); compare with generous capacity instead
+        cfg = cfg.replace(capacity_factor=8.0)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+
+    full_logits, _ = lm_forward(params, {"tokens": tokens}, cfg)
+
+    caches = init_caches(cfg, b, s + 1, jnp.float32)
+    inc = []
+    for t in range(s):
+        logits, caches = lm_decode(
+            params, caches, {"tokens": tokens[:, t:t + 1]},
+            jnp.asarray(t, jnp.int32), cfg)
+        inc.append(logits[:, 0])
+    inc = jnp.stack(inc, axis=1)
+
+    np.testing.assert_allclose(
+        np.asarray(inc, np.float32), np.asarray(full_logits, np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+def test_chunked_attention_matches_full():
+    rng = jax.random.PRNGKey(0)
+    b, s, h, kv, dh = 2, 64, 8, 4, 16
+    q = jax.random.normal(rng, (b, s, h, dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, kv, dh))
+    for window in [None, 16]:
+        got = chunked_causal_attention(q, k, v, chunk=16, window=window)
+        want = full_attention(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_mamba_chunked_equals_sequential_decode():
+    d = 32
+    p = mamba_init(jax.random.PRNGKey(0), d, d_state=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 20, d))
+    y_full = mamba_apply(p, x, chunk=5)
+    y_full2 = mamba_apply(p, x, chunk=20)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_full2), atol=1e-4)
+
+    cache = init_mamba_cache(2, 2 * d, 8, 4, jnp.float32)
+    ys = []
+    for t in range(20):
+        y, cache = mamba_decode(p, x[:, t:t + 1], cache)
+        ys.append(y[:, 0])
+    y_inc = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_inc), np.asarray(y_full), atol=1e-3)
+
+
+def test_mlstm_chunked_equals_decode():
+    d, h = 32, 4
+    p = mlstm_init(jax.random.PRNGKey(0), d, h)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    y_full = mlstm_apply(p, x, num_heads=h, chunk=4)
+    y_full2 = mlstm_apply(p, x, num_heads=h, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_full2),
+                               atol=1e-4, rtol=1e-3)
+    d_in = 2 * d
+    cache = init_mlstm_cache(2, h, d_in // h)
+    ys = []
+    for t in range(16):
+        y, cache = mlstm_decode(p, x[:, t:t + 1], cache, num_heads=h)
+        ys.append(y[:, 0])
+    y_inc = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_inc), np.asarray(y_full),
+                               atol=1e-3, rtol=1e-2)
+
+
+def test_slstm_scan_equals_decode():
+    d, h = 32, 4
+    p = slstm_init(jax.random.PRNGKey(0), d, h)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, d))
+    y_full = slstm_apply(p, x, num_heads=h)
+    cache = init_slstm_cache(2, d)
+    ys = []
+    for t in range(10):
+        y, cache = slstm_decode(p, x[:, t:t + 1], cache, num_heads=h)
+        ys.append(y[:, 0])
+    y_inc = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_inc), np.asarray(y_full), atol=1e-4)
+
+
+def test_swa_ring_buffer_decode():
+    """SWA cache smaller than the sequence: ring writes stay correct."""
+    cfg = make_smoke(get_config("mixtral-8x7b"), window=8, capacity_factor=8.0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 20
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab)
+    full_logits, _ = lm_forward(params, {"tokens": tokens}, cfg)
+    caches = init_caches(cfg, b, cfg.window, jnp.float32)  # ring = window
+    logits = None
+    for t in range(s):
+        logits, caches = lm_decode(
+            params, caches, {"tokens": tokens[:, t:t + 1]},
+            jnp.asarray(t, jnp.int32), cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        atol=3e-2, rtol=3e-2,
+    )

@@ -1,0 +1,119 @@
+"""Structures, resource model (Eq. 1), masks, and packing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockingSpec,
+    TPUResourceModel,
+    block_partition,
+    build_structures,
+    bsr_to_dense,
+    consecutive_groups,
+    count_zero_structures,
+    init_masks,
+    mask_from_selection,
+    masks_from_knapsack,
+    pack_bsr,
+    sparsity_report,
+    structure_norms_dense,
+)
+
+
+def test_eq1_consecutive_groups():
+    # paper's cases: P=18 -> C=2; P=9 -> C=4; P=16 -> ceil(72/16)=5
+    assert consecutive_groups(36, 18) == 2
+    assert consecutive_groups(36, 9) == 4
+    assert consecutive_groups(36, 16) == 5
+    assert consecutive_groups(36, 36) == 1
+    assert consecutive_groups(36, 50) == 1
+
+
+def test_fpga_resource_vector():
+    dsp, bram = TPUResourceModel.fpga_dsp_bram(16, rf=4)
+    assert dsp == 1.0 and bram == pytest.approx(64 / (36 * 1024))
+    dsp, _ = TPUResourceModel.fpga_dsp_bram(9, rf=4)
+    assert dsp == 0.0  # paper footnote 3: <10 bits -> LUTs
+
+
+@given(
+    k=st.integers(1, 300), n=st.integers(1, 300),
+    bk=st.sampled_from([8, 32, 128]), bn=st.sampled_from([32, 128]),
+)
+@settings(max_examples=40, deadline=None)
+def test_partition_covers_everything(k, n, bk, bn):
+    info = block_partition("w", (k, n), BlockingSpec(bk=bk, bn=bn))
+    assert info.grid_k * info.blocking.bk >= k
+    assert info.grid_n * info.blocking.bn >= n
+    sel = np.ones(info.num_structures)
+    mask = mask_from_selection(sel, info)
+    assert mask.shape == (k, n)
+    assert mask.min() == 1.0
+
+
+@given(
+    k=st.integers(8, 128), n=st.integers(8, 128), seed=st.integers(0, 100),
+)
+@settings(max_examples=30, deadline=None)
+def test_mask_roundtrip_and_pack(k, n, seed):
+    rng = np.random.default_rng(seed)
+    spec = BlockingSpec(bk=16, bn=16)
+    info = block_partition("w", (k, n), spec)
+    sel = (rng.uniform(size=info.num_structures) < 0.6).astype(np.float32)
+    mask = mask_from_selection(sel, info)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    bsr = pack_bsr(w, spec, mask=mask)
+    dense = np.asarray(bsr_to_dense(bsr))
+    assert np.allclose(dense, w * mask)
+    # pruned weights are exactly zero after packing
+    assert np.all(dense[mask == 0] == 0)
+
+
+def test_structure_norms_match_manual():
+    w = jnp.arange(24, dtype=jnp.float32).reshape(4, 6)
+    info = block_partition("w", (4, 6), BlockingSpec(bk=2, bn=3))
+    norms = np.asarray(structure_norms_dense(w, info))
+    manual = np.zeros((1, 2, 2))
+    wn = np.asarray(w)
+    for i in range(2):
+        for j in range(2):
+            manual[0, i, j] = np.linalg.norm(wn[2*i:2*i+2, 3*j:3*j+3])
+    assert np.allclose(norms, manual, atol=1e-5)
+
+
+def test_build_structures_excludes_non_matmul():
+    params = {
+        "attn": {"wq": {"kernel": jnp.ones((64, 64))}},
+        "norm": {"scale": jnp.ones((64,))},
+        "tiny": {"kernel": jnp.ones((4, 4))},
+    }
+    st_ = build_structures(params, BlockingSpec(bk=32, bn=32), min_size=1024)
+    paths = [i.path for i in st_.infos]
+    assert paths == ["attn/wq/kernel"]
+
+
+def test_sparsity_report_counts():
+    params = {"l": {"kernel": jnp.ones((64, 64))}}
+    st_ = build_structures(params, BlockingSpec(bk=32, bn=32), min_size=16)
+    sel = np.array([1, 0, 0, 1], dtype=np.float32)
+    masks = masks_from_knapsack(params, st_, sel)
+    rep = sparsity_report(params, masks, st_)
+    assert rep["structure_sparsity"] == pytest.approx(0.5)
+    assert rep["weight_sparsity"] == pytest.approx(0.5)
+    pruned, total = count_zero_structures(masks, st_)
+    assert (pruned, total) == (2, 4)
+
+
+def test_moe_expert_planes():
+    """3-D expert weights: expert dim becomes independent planes so the
+    knapsack can drop whole experts (paper's coarse structures)."""
+    params = {"moe": {"experts_up": jnp.ones((4, 64, 64))}}
+    st_ = build_structures(params, BlockingSpec(bk=64, bn=64), min_size=16)
+    assert st_.infos[0].planes == 4
+    assert st_.infos[0].num_structures == 4
+    sel = np.array([1, 1, 0, 1], dtype=np.float32)
+    masks = masks_from_knapsack(params, st_, sel)
+    m = np.asarray(masks["moe"]["experts_up"])
+    assert m[2].sum() == 0 and m[0].min() == 1
