@@ -39,7 +39,7 @@ def main(quick: bool = False) -> List[str]:
         dt = time.time() - t0
         assert np.all(r.used <= c + 1e-6)
         out.append(f"knapsack_scale_n{n},{dt*1e6:.0f},value={r.value:.0f} "
-                   f"feasible=True method={r.method}")
+                   f"feasible={r.feasible} method={r.method}")
 
     # homogeneous fast path (the common per-layer case)
     n = 500_000

@@ -2,31 +2,24 @@
 
     PYTHONPATH=src python examples/serve_pruned.py
 
-Trains a small LM briefly, prunes its MLP weights at MXU-tile granularity,
-packs survivors to BSR, and serves batched greedy decoding where every
-pruned tile is *skipped* (the paper's §III-C codegen on TPU): resource
-accounting shows the per-layer MXU-pass and HBM-page savings.
+Trains a small LM briefly, knapsack-prunes it at MXU-tile granularity,
+packs the survivors with ``repro.sparse.pack_params``, and serves batched
+greedy decoding straight on the packed params: every matmul routes through
+the ``models/layers.matmul`` dispatch, so pruned tiles are *skipped* (the
+paper's §III-C codegen on TPU).  The packed-vs-masked-dense equivalence is
+spot-checked with ``unpack_params`` — the same oracle the tier-1 tests use.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (
-    BlockingSpec,
-    TPUResourceModel,
-    apply_masks,
-    build_structures,
-    masks_from_knapsack,
-    pack_bsr,
-    solve_mdkp,
-)
+from repro.core import BlockingSpec, apply_masks
 from repro.core.masks import _get_path
-from repro.core.structures import structure_norms_dense
 from repro.data import TokenTask
-from repro.kernels import bsr_matmul
 from repro.models import init_caches, init_params, lm_decode
 from repro.optim import AdamWConfig, constant_lr
+from repro.sparse import knapsack_prune, pack_params, sparsity_summary, unpack_params
 from repro.train import init_train_state, make_train_step
 
 
@@ -47,55 +40,48 @@ def main():
     params = state["params"]
     print(f"trained: loss={float(metrics['total_loss']):.3f}")
 
-    # knapsack-prune the MLP weights at tile granularity
-    blocking = BlockingSpec(bk=128, bn=128)
-    structures = build_structures(params, blocking, include=("mlp",),
-                                  min_size=4096)
-    rm = TPUResourceModel(precision="bf16")
-    values, weights = [], []
-    for info in structures.infos:
-        w = _get_path(params, info.path)
-        norms = np.asarray(structure_norms_dense(w, info)).ravel()
-        values.append(norms / max(norms.max(), 1e-9))
-        weights.append(np.tile(rm.structure_cost(info.blocking)[:, None],
-                               (1, info.num_structures)))
-    v = np.concatenate(values)
-    u = np.concatenate(weights, axis=1)
-    budget = u.sum(axis=1) * 0.5
-    sel = solve_mdkp(v, u, budget)
-    masks = masks_from_knapsack(params, structures, sel.x.astype(np.float32))
-    print(f"knapsack kept {sel.x.sum()}/{len(sel.x)} structures "
-          f"(budget 50% MXU + 50% HBM)")
-
-    # serve: greedy decode with BSR-packed MLP weights
-    mp = apply_masks(params, masks)
-    bsr_weights = {}
-    for info in structures.infos:
-        w = _get_path(params, info.path)
-        m = _get_path(masks, info.path)
-        bsr_weights[info.path] = pack_bsr(np.asarray(w), info.blocking,
-                                          mask=np.asarray(m))
-        d = bsr_weights[info.path].density()
-        print(f"  {info.path}: BSR density {d:.2f} "
+    # knapsack-prune the MLP weights at tile granularity, pack to BSR
+    sel = knapsack_prune(
+        params, sparsity=0.5, blocking=BlockingSpec(bk=128, bn=128),
+        include=("mlp",), min_size=4096)
+    print(f"knapsack kept {sel.kept}/{sel.total} structures "
+          f"({sel.result.method}, feasible={sel.result.feasible}; "
+          f"budget 50% MXU + 50% HBM)")
+    packed = pack_params(params, sel.masks, sel.structures)
+    summ = sparsity_summary(packed)
+    for path, d in sorted(summ["per_path"].items()):
+        print(f"  {path}: BSR density {d:.2f} "
               f"(skips {1-d:.0%} of MXU passes + HBM pages)")
 
+    # serve: greedy decode straight on the packed params
     b, steps = 4, 16
     caches = init_caches(cfg, b, steps + 1, jnp.float32)
     tok = jnp.zeros((b, 1), jnp.int32)
     out = []
     for t in range(steps):
-        logits, caches = lm_decode(mp, caches, {"tokens": tok},
+        logits, caches = lm_decode(packed, caches, {"tokens": tok},
                                    jnp.asarray(t, jnp.int32), cfg)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         out.append(np.asarray(tok[:, 0]))
 
-    # spot-check: BSR matmul == masked dense
-    info = structures.infos[0]
-    wd = _get_path(mp, info.path)
-    x = jax.random.normal(jax.random.PRNGKey(1), (8, wd.shape[0]))
+    # spot-check: the packed tree reconstructs to exactly masked dense,
+    # and one decode step agrees between the two executions
+    masked = apply_masks(params, sel.masks)
+    recon = unpack_params(packed)
+    path = sel.structures.infos[0].path
     np.testing.assert_allclose(
-        np.asarray(bsr_matmul(x, bsr_weights[info.path])),
-        np.asarray(x @ wd), atol=1e-4)
+        np.asarray(_get_path(recon, path)),
+        np.asarray(_get_path(masked, path)), atol=1e-6)
+
+    caches_d = init_caches(cfg, b, 2, jnp.float32)
+    caches_p = init_caches(cfg, b, 2, jnp.float32)
+    tok0 = jnp.zeros((b, 1), jnp.int32)
+    ld, _ = lm_decode(masked, caches_d, {"tokens": tok0},
+                      jnp.asarray(0, jnp.int32), cfg)
+    lp, _ = lm_decode(packed, caches_p, {"tokens": tok0},
+                      jnp.asarray(0, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                               atol=1e-3, rtol=1e-4)
     print(f"decoded {steps} tokens x {b} seqs; BSR path == masked dense. done.")
 
 

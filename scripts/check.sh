@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Smoke gate: deterministic test subset + the pruned-serving entrypoints.
+#
+# The full tier-1 command is `PYTHONPATH=src python -m pytest -x -q`; it
+# currently carries 7 known seed failures (jax version drift in
+# test_sharding_dryrun / test_substrate — see ROADMAP "Open items"), so
+# this gate runs the modules that must stay green plus the serving smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q \
+    tests/test_knapsack.py \
+    tests/test_structures_masks.py \
+    tests/test_kernels.py \
+    tests/test_sparse_exec.py \
+    tests/test_serve_equiv.py \
+    tests/test_models.py \
+    tests/test_pruner.py \
+    tests/test_system.py
+
+python examples/serve_pruned.py
+
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+    --pruned 0.5 --prompt-len 4 --gen 8
+
+echo "check.sh: OK"

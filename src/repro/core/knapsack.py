@@ -42,12 +42,19 @@ class KnapsackResult:
     value: float
     used: np.ndarray         # (m,) resources consumed
     method: str
+    feasible: bool = True    # used <= capacity at construction time
 
-    @property
-    def feasible(self) -> bool:
-        return bool(self._feasible)
 
-    _feasible: bool = True
+def _make_result(x, values, weights, capacity, method) -> KnapsackResult:
+    """Build a result with ``feasible`` computed from used <= capacity."""
+    used = weights @ x
+    return KnapsackResult(
+        x=x,
+        value=float(values @ x),
+        used=used,
+        method=method,
+        feasible=bool(np.all(used <= capacity + 1e-9)),
+    )
 
 
 def _validate(values, weights, capacity):
@@ -79,7 +86,7 @@ def solve_brute(values, weights, capacity) -> KnapsackResult:
             v = float(values @ x)
             if v > best_v:
                 best_v, best_x = v, x
-    return KnapsackResult(x=best_x, value=best_v, used=weights @ best_x, method="brute")
+    return _make_result(best_x, values, weights, capacity, "brute")
 
 
 def solve_dp(values, weights, capacity, *, scale: int = 4096) -> KnapsackResult:
@@ -97,7 +104,7 @@ def solve_dp(values, weights, capacity, *, scale: int = 4096) -> KnapsackResult:
     n = values.shape[0]
     if c <= 0:
         x = np.zeros(n, dtype=bool)
-        return KnapsackResult(x=x, value=0.0, used=np.zeros(1), method="dp")
+        return _make_result(x, values, weights, capacity, "dp")
 
     int_like = np.allclose(w, np.round(w)) and abs(c - round(c)) < 1e-9
     if int_like:
@@ -144,7 +151,7 @@ def solve_dp(values, weights, capacity, *, scale: int = 4096) -> KnapsackResult:
                 break
             x[i] = False
             used = weights @ x
-    return KnapsackResult(x=x, value=float(values @ x), used=weights @ x, method="dp")
+    return _make_result(x, values, weights, capacity, "dp")
 
 
 def _greedy_order(values, weights, capacity, mults) -> np.ndarray:
@@ -188,7 +195,7 @@ def solve_greedy(values, weights, capacity, *, mults: Optional[np.ndarray] = Non
         mults = 1.0 / np.maximum(capacity, 1e-12)
     order = _greedy_order(values, weights, capacity, mults)
     x = _greedy_fill(values, weights, capacity, order)
-    return KnapsackResult(x=x, value=float(values @ x), used=weights @ x, method="greedy")
+    return _make_result(x, values, weights, capacity, "greedy")
 
 
 def _uniform_rows(weights: np.ndarray) -> bool:
@@ -218,7 +225,7 @@ def solve_mdkp(
     n = values.shape[0]
     m = weights.shape[0]
     if n == 0:
-        return KnapsackResult(x=np.zeros(0, bool), value=0.0, used=np.zeros(m), method="mdkp")
+        return _make_result(np.zeros(0, bool), values, weights, capacity, "mdkp")
 
     if n <= 20 and not _uniform_rows(weights):
         return solve_brute(values, weights, capacity)   # exact on small instances
@@ -232,7 +239,7 @@ def solve_mdkp(
         x = np.zeros(n, dtype=bool)
         if k > 0:
             x[np.argsort(-values, kind="stable")[:k]] = True
-        return KnapsackResult(x=x, value=float(values @ x), used=weights @ x, method="mdkp-topk")
+        return _make_result(x, values, weights, capacity, "mdkp-topk")
 
     best = solve_greedy(values, weights, capacity)
     if m == 1:
@@ -270,8 +277,7 @@ def solve_mdkp(
             x2[i] = True
             val2 = float(values @ x2)
             if val2 > best.value and np.all(weights @ x2 <= capacity + 1e-9):
-                best = KnapsackResult(x=x2, value=val2, used=weights @ x2,
-                                      method="mdkp-forced")
+                best = _make_result(x2, values, weights, capacity, "mdkp-forced")
 
     # 1-swap local search on the value frontier
     x = best.x.copy()
@@ -296,7 +302,6 @@ def solve_mdkp(
                     x[o] = True
                     used = trial
                     break
-    val = float(values @ x)
-    if val < best.value:
-        x, val, used = best.x, best.value, best.used
-    return KnapsackResult(x=x, value=val, used=weights @ x, method="mdkp")
+    if float(values @ x) < best.value:
+        x = best.x
+    return _make_result(x, values, weights, capacity, "mdkp")

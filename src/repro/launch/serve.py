@@ -4,9 +4,12 @@
 --prompt-len 16 --gen 32``
 
 Runs prefill (forward over the prompt, filling caches) then the decode
-loop.  On a real fleet, add ``--mesh single|multi`` for the production
-placement; serving with pruned weights uses the BSR path benchmarked in
-benchmarks/bench_kernels.py.
+loop.  ``--pruned <sparsity>`` turns on the sparse execution layer
+(DESIGN.md §6): the model is knapsack-pruned at ``--block bk,bn`` tile
+granularity, packed to BSR, and every decode matmul skips pruned tiles
+via the ``models/layers.matmul`` dispatch (ref path on CPU, compiled
+Pallas on TPU).  On a real fleet, add ``--mesh single|multi`` for the
+production placement.
 """
 import argparse
 import sys
@@ -21,6 +24,13 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pruned", type=float, default=None, metavar="SPARSITY",
+                    help="knapsack-prune to this structure sparsity and "
+                         "serve through the zero-skipping BSR path")
+    ap.add_argument("--block", type=str, default="128,128", metavar="BK,BN",
+                    help="pruning tile shape (MXU-aligned on TPU)")
+    ap.add_argument("--min-size", type=int, default=4096,
+                    help="smallest weight (elements) eligible for pruning")
     args = ap.parse_args()
 
     import jax
@@ -37,12 +47,33 @@ def main() -> int:
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
+
+    if args.pruned is not None:
+        from repro.core import BlockingSpec
+        from repro.kernels.ops import on_tpu
+        from repro.sparse import knapsack_prune, pack_params, sparsity_summary
+
+        bk, bn = (int(t) for t in args.block.split(","))
+        sel = knapsack_prune(
+            params, sparsity=args.pruned,
+            blocking=BlockingSpec(bk=bk, bn=bn), min_size=args.min_size,
+        )
+        params = pack_params(params, sel.masks, sel.structures)
+        summ = sparsity_summary(params)
+        path = "pallas" if on_tpu() else "ref (CPU)"
+        print(f"pruned: kept {sel.kept}/{sel.total} structures "
+              f"({sel.result.method}, feasible={sel.result.feasible}); "
+              f"BSR density {summ['density']:.2f} "
+              f"({summ['nnz_blocks']}/{summ['total_blocks']} blocks), "
+              f"dispatch={path}")
+        for p, d in sorted(summ["per_path"].items())[:4]:
+            print(f"  {p}: density {d:.2f}")
+
     b, plen = args.batch, args.prompt_len
-    max_len = plen + args.gen
+    max_len = max(plen + args.gen, 1)
     caches = init_caches(cfg, b, max_len, jnp.float32)
 
-    prompt = jax.random.randint(key, (b, plen), 0, cfg.vocab)
-    batch = {"tokens": prompt}
+    prompt = jax.random.randint(key, (b, max(plen, 1)), 0, cfg.vocab)
     if cfg.enc_layers:
         frames = jax.random.normal(key, (b, cfg.enc_frames, cfg.d_model))
         enc = encoder_forward(params, frames, cfg)
@@ -53,22 +84,27 @@ def main() -> int:
     # the batched prefill step for the assigned prefill cells)
     decode = jax.jit(lambda p, c, t, l: lm_decode(p, c, {"tokens": t}, l, cfg))
     t0 = time.time()
-    tok = prompt[:, :1]
-    for i in range(plen):
-        logits, caches = decode(params, caches, prompt[:, i:i + 1],
-                                jnp.asarray(i, jnp.int32))
+    if plen > 0:
+        for i in range(plen):
+            logits, caches = decode(params, caches, prompt[:, i:i + 1],
+                                    jnp.asarray(i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    else:
+        # empty prompt: start generation from token 0 (a stand-in BOS)
+        tok = jnp.zeros((b, 1), jnp.int32)
     out_tokens = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     for i in range(args.gen):
         out_tokens.append(np.asarray(tok)[:, 0])
         logits, caches = decode(params, caches, tok,
                                 jnp.asarray(plen + i, jnp.int32))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    dt = time.time() - t0
-    gen = np.stack(out_tokens, axis=1)
+    dt = max(time.time() - t0, 1e-9)
+    gen = (np.stack(out_tokens, axis=1) if out_tokens
+           else np.zeros((b, 0), np.int32))
     print(f"generated {gen.shape} tokens in {dt:.2f}s "
           f"({args.gen * b / dt:.1f} tok/s aggregate)")
-    print("sample:", gen[0][:16])
+    if out_tokens:
+        print("sample:", gen[0][:16])
     return 0
 
 

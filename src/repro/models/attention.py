@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.packing import BSRWeight
 from repro.distributed.sharding import logical_constraint
 from .layers import apply_mrope, apply_rope, dense, dense_init
 
@@ -159,12 +160,14 @@ def attention_apply(
             k = apply_rope(k, positions, theta=rope_theta)
     o = chunked_causal_attention(q, k, v, causal=causal, window=window, chunk=chunk)
     o = logical_constraint(o, "batch", "seq", "heads", None)
-    if "bias" not in p["wo"]:
+    if "bias" not in p["wo"] and not isinstance(p["wo"]["kernel"], BSRWeight):
         # contract (heads, dh) via a kernel-side reshape: reshaping the
         # *activation* (B,S,H,dh)->(B,S,H*dh) merges the heads-sharded dim
         # with dh and forces a full all-gather fwd+bwd (32 GB/step measured
         # on qwen/train_4k — EXPERIMENTS.md §Perf P5); the kernel reshape
-        # is tile-aligned (whole heads per shard) and free.
+        # is tile-aligned (whole heads per shard) and free.  A packed BSR
+        # kernel has no dense (H*dh, D) view, so it takes the dispatch
+        # path below — serving-only, where the all-gather concern is moot.
         w3 = p["wo"]["kernel"].reshape(num_heads, head_dim, -1)
         out = jnp.einsum("bshd,hde->bse", o, w3,
                          preferred_element_type=accum).astype(x.dtype)

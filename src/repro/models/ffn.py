@@ -2,7 +2,9 @@
 
 Kernels are (in, out) matmuls — the natural targets of resource-aware
 structured pruning.  The "mlp" logical axis puts the hidden dim on the TP
-mesh axis (Megatron column/row parallel pair).
+mesh axis (Megatron column/row parallel pair).  All matmuls go through
+``layers.dense``, so a BSR-packed kernel (``repro.sparse.pack_params``)
+runs here unchanged with pruned tiles skipped (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -38,8 +40,7 @@ def mlp_init(
 
 def mlp_apply(p: Dict, x: jnp.ndarray, *, activation: str = "silu",
               accum=None, out_seq: str = "seq") -> jnp.ndarray:
-    import jax.numpy as _jnp
-    accum = accum or _jnp.float32
+    accum = accum or jnp.float32
     up = dense(p["w_up"], x)
     up = logical_constraint(up, "batch", "seq", "mlp")
     act = getattr(jax.nn, activation)

@@ -7,6 +7,10 @@ Conventions
   directly onto (bk, bn) MXU tiles of the (K, N) matmul.
 * Matmuls accumulate in fp32 (``preferred_element_type``) and cast back to
   the activation dtype — the TPU-native mixed-precision policy.
+* ``matmul`` is the single sparse-execution dispatch point (DESIGN.md §6):
+  a kernel leaf may be a dense array *or* a packed ``BSRWeight`` /
+  ``BSRPlanes`` (from ``repro.sparse.pack_params``); packed leaves route
+  to ``kernels.ops.bsr_matmul`` which skips pruned tiles outright.
 * ``logical_constraint`` annotates logical axes; it is a no-op outside a
   mesh/rules context so the same code runs in CPU unit tests.
 """
@@ -19,9 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import BSRWeight
 from repro.distributed.sharding import logical_constraint
+from repro.kernels.ops import bsr_matmul
+from repro.sparse.transform import BSRPlanes
 
 __all__ = [
+    "matmul", "expert_matmul",
     "dense_init", "dense",
     "rmsnorm_init", "rmsnorm",
     "layernorm_init", "layernorm",
@@ -56,6 +64,31 @@ def dense_init(
     return p
 
 
+def matmul(x: jnp.ndarray, w, *, accum=jnp.float32) -> jnp.ndarray:
+    """x (..., K) @ w (K, N) -> (..., N) in ``accum`` dtype.
+
+    The sparse-execution dispatch point: a packed ``BSRWeight`` routes to
+    the zero-skipping BSR kernel (ref on CPU, Pallas on TPU); dense arrays
+    take the einsum path.  Everything above (dense/ffn/attention/moe and
+    both the forward and decode stacks) is agnostic to which it gets."""
+    if isinstance(w, BSRWeight):
+        return bsr_matmul(x, w).astype(accum)
+    return jnp.einsum("...k,kn->...n", x, w, preferred_element_type=accum)
+
+
+def expert_matmul(h: jnp.ndarray, w, *, accum=jnp.float32) -> jnp.ndarray:
+    """Batched expert matmul (g, E, C, d) @ (E, d, f) -> (g, E, C, f).
+
+    ``BSRPlanes`` (per-expert BSR stacks) run one zero-skipping matmul per
+    plane — a fully-pruned expert costs a single padding slot; dense 3-D
+    weights take the batched einsum."""
+    if isinstance(w, BSRPlanes):
+        outs = [matmul(h[:, e], plane, accum=accum)
+                for e, plane in enumerate(w.planes)]
+        return jnp.stack(outs, axis=1)
+    return jnp.einsum("gecd,edf->gecf", h, w, preferred_element_type=accum)
+
+
 def dense(p: Dict[str, jnp.ndarray], x: jnp.ndarray, *, accum=jnp.float32) -> jnp.ndarray:
     """Matmul with selectable accumulation dtype.
 
@@ -63,7 +96,7 @@ def dense(p: Dict[str, jnp.ndarray], x: jnp.ndarray, *, accum=jnp.float32) -> jn
     all-reduce the partial sums in bf16 — halves the dominant TP collective
     bytes (EXPERIMENTS.md §Perf); the MXU still accumulates each partial in
     fp32 internally."""
-    y = jnp.einsum("...k,kn->...n", x, p["kernel"], preferred_element_type=accum)
+    y = matmul(x, p["kernel"], accum=accum)
     if "bias" in p:
         y = y + p["bias"].astype(accum)
     return y.astype(x.dtype)

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import _concrete_mesh, logical_constraint
-from .layers import truncated_normal_init
+from .layers import expert_matmul, matmul, truncated_normal_init
 
 
 def _cap_axis_ok(num_experts: int) -> bool:
@@ -86,9 +86,9 @@ def moe_apply(
     xt = logical_constraint(xt, "batch", None, "embed")
 
     # --- routing (fp32) ----------------------------------------------------
-    logits = jnp.einsum(
-        "gnd,de->gne", xt, p["router"]["kernel"], preferred_element_type=jnp.float32
-    )
+    # routed through the sparse dispatch for uniformity; the default prune
+    # include list keeps the router dense (it decides *where* tokens go)
+    logits = matmul(xt, p["router"]["kernel"], accum=jnp.float32)
     # pin the expert dim replicated: propagation otherwise shards E over
     # the model axis and the router backward turns into a (g,n,d) f32 AR
     # per layer (+ top_k all-gathers) — §Perf granite G3
@@ -134,20 +134,18 @@ def moe_apply(
     cap_ax = "expert_cap" if _cap_axis_ok(num_experts) else None
     buffer = logical_constraint(buffer, "batch", None, cap_ax, None)
 
-    # --- expert compute (EP batched matmul) ----------------------------------
+    # --- expert compute (EP batched matmul; BSRPlanes skip pruned tiles) -----
     act = getattr(jax.nn, activation)
-    up = jnp.einsum("gecd,edf->gecf", buffer, p["experts_up"],
-                    preferred_element_type=jnp.float32)
+    up = expert_matmul(buffer, p["experts_up"], accum=jnp.float32)
     if "experts_gate" in p:
-        gt = jnp.einsum("gecd,edf->gecf", buffer, p["experts_gate"],
-                        preferred_element_type=jnp.float32)
+        gt = expert_matmul(buffer, p["experts_gate"], accum=jnp.float32)
         h = act(gt) * up
     else:
         h = act(up)
     h = h.astype(x.dtype)
     h = logical_constraint(h, "batch", None, cap_ax, None)
-    out_e = jnp.einsum("gecf,efd->gecd", h, p["experts_down"],
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out_e = expert_matmul(h, p["experts_down"],
+                          accum=jnp.float32).astype(x.dtype)
     out_e = logical_constraint(out_e, "batch", None, cap_ax, None)
 
     # --- combine --------------------------------------------------------------

@@ -12,6 +12,13 @@ A model is a list of ``LayerSpec``s (mixer + mlp per layer) generated from
 
 Layers are python-unrolled (accurate XLA cost analysis; DESIGN.md §4) and
 optionally rematerialized per layer.
+
+Sparse execution: ``lm_forward`` and ``lm_decode`` accept params whose
+matmul kernels were packed to BSR by ``repro.sparse.pack_params`` — every
+matmul routes through the ``layers.matmul`` dispatch point, so pruned
+tiles are skipped on both the prefill and the KV-cache decode paths
+(DESIGN.md §6).  Packed leaves are registered pytrees: jit, remat and the
+cache mechanics are oblivious to them.
 """
 from __future__ import annotations
 

@@ -1,0 +1,26 @@
+"""repro.sparse — the sparse execution layer (DESIGN.md §6).
+
+Turns a pruned model into one that actually *skips* pruned structures at
+serving time (the paper's §III-C codegen, TPU edition):
+
+* transform   pack_params / unpack_params pytree transforms (BSR leaves)
+* prune       one-shot knapsack pruning for the serving entrypoints
+
+The model stack consumes packed params unchanged: ``models/layers.matmul``
+routes ``BSRWeight``/``BSRPlanes`` leaves to ``kernels.ops.bsr_matmul``
+(ref on CPU, compiled Pallas on TPU) and dense arrays to the einsum path.
+"""
+from .prune import DEFAULT_EXCLUDE, DEFAULT_INCLUDE, PruneSelection, knapsack_prune
+from .transform import (
+    BSRPlanes,
+    is_packed_leaf,
+    pack_params,
+    sparsity_summary,
+    unpack_params,
+)
+
+__all__ = [
+    "BSRPlanes", "is_packed_leaf", "pack_params", "sparsity_summary",
+    "unpack_params",
+    "DEFAULT_EXCLUDE", "DEFAULT_INCLUDE", "PruneSelection", "knapsack_prune",
+]

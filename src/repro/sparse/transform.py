@@ -1,0 +1,175 @@
+"""Params-pytree sparse execution transform (DESIGN.md §6).
+
+``pack_params`` replaces each prunable matmul ``kernel`` leaf with a
+``BSRWeight`` (2-D weights) or ``BSRPlanes`` (stacked per-plane BSR for
+3-D expert weights), so the whole model stack — forward *and* decode —
+runs on packed params through the single dispatch point in
+``models/layers.matmul``: pruned tiles are skipped outright instead of
+multiplied by zero.  ``unpack_params`` is the dense reconstruction oracle
+used by the equivalence tests.
+
+The transform is host-side (numpy): packing happens once at serving
+start, not inside a jitted step.  Packed leaves are registered pytrees,
+so the resulting params tree jits, remats and shards like the dense one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import _get_path, _set_path, build_structures
+from repro.core.packing import BSRWeight, bsr_to_dense, pack_bsr
+from repro.core.structures import BlockingSpec, LayerStructures, PRUNABLE_MIN_SIZE
+
+__all__ = [
+    "BSRPlanes",
+    "pack_params",
+    "unpack_params",
+    "is_packed_leaf",
+    "sparsity_summary",
+]
+
+
+@dataclasses.dataclass
+class BSRPlanes:
+    """Per-plane BSR stack for a >2-D weight (e.g. MoE (E, D, F) experts).
+
+    Each plane is an independent ``BSRWeight`` over the trailing (K, N)
+    dims; pruning all tiles of a plane removes the whole expert — the
+    paper's coarse structure.  Planes keep their own ``max_nnz`` so a
+    nearly-dead expert costs almost nothing in the matmul loop.
+    """
+
+    planes: Tuple[BSRWeight, ...]
+    shape: Tuple[int, ...]          # full dense shape, leading dims included
+
+    def density(self) -> float:
+        nnz = sum(p.nnz_blocks for p in self.planes)
+        total = sum(p.grid_k * p.grid_n for p in self.planes)
+        return nnz / max(total, 1)
+
+    def tree_flatten(self):
+        return tuple(self.planes), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(planes=tuple(children), shape=aux[0])
+
+
+jax.tree_util.register_pytree_node(
+    BSRPlanes, BSRPlanes.tree_flatten, BSRPlanes.tree_unflatten
+)
+
+
+def is_packed_leaf(x: Any) -> bool:
+    return isinstance(x, (BSRWeight, BSRPlanes))
+
+
+def _copy_tree(tree):
+    if isinstance(tree, dict):
+        return {k: _copy_tree(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_copy_tree(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(_copy_tree(v) for v in tree)
+    return tree
+
+
+def _host(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+def pack_params(
+    params: Mapping[str, Any],
+    masks: Optional[Mapping[str, Any]] = None,
+    structures: Optional[LayerStructures] = None,
+    blocking: Optional[BlockingSpec] = None,
+    *,
+    min_size: int = PRUNABLE_MIN_SIZE,
+    **iter_kwargs,
+) -> Dict[str, Any]:
+    """Replace prunable kernel leaves with BSR weights.
+
+    ``structures`` (from ``build_structures`` / ``knapsack_prune``) names
+    the leaves to pack and their blocking; when omitted, structures are
+    built here from ``blocking``.  ``masks`` zeroes pruned tiles before
+    packing; with ``masks=None`` only exactly-zero tiles are dropped.
+    All other leaves are passed through untouched.
+    """
+    if structures is None:
+        if blocking is None:
+            raise ValueError("pack_params needs either structures or blocking")
+        structures = build_structures(
+            params, blocking, min_size=min_size, **iter_kwargs
+        )
+    packed = _copy_tree(dict(params))
+    for info in structures.infos:
+        w = _host(_get_path(params, info.path))
+        m = None
+        if masks is not None:
+            mleaf = _get_path(masks, info.path)
+            m = None if mleaf is None else _host(mleaf)
+        if w.ndim == 2:
+            leaf: Any = pack_bsr(w, info.blocking, mask=m)
+        else:
+            k, n = w.shape[-2], w.shape[-1]
+            w3 = w.reshape(info.planes, k, n)
+            m3 = None if m is None else m.reshape(info.planes, k, n)
+            leaf = BSRPlanes(
+                planes=tuple(
+                    pack_bsr(w3[p], info.blocking,
+                             mask=None if m3 is None else m3[p])
+                    for p in range(info.planes)
+                ),
+                shape=tuple(int(s) for s in w.shape),
+            )
+        _set_path(packed, info.path, leaf)
+    return packed
+
+
+def unpack_params(packed: Mapping[str, Any]) -> Dict[str, Any]:
+    """Dense reconstruction of a packed tree — the test oracle.
+
+    Every ``BSRWeight``/``BSRPlanes`` leaf becomes the masked dense weight
+    (pruned tiles exactly zero); all other leaves pass through.
+    """
+
+    def leaf_fn(x):
+        if isinstance(x, BSRWeight):
+            return bsr_to_dense(x)
+        if isinstance(x, BSRPlanes):
+            dense = jnp.stack([bsr_to_dense(p) for p in x.planes])
+            return dense.reshape(x.shape)
+        return x
+
+    return jax.tree.map(leaf_fn, dict(packed), is_leaf=is_packed_leaf)
+
+
+def sparsity_summary(packed: Mapping[str, Any]) -> Dict[str, Any]:
+    """Per-path and aggregate block density of a packed tree."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        dict(packed), is_leaf=is_packed_leaf
+    )[0]
+    per_path: Dict[str, float] = {}
+    nnz = total = 0
+    for keypath, leaf in flat:
+        if not is_packed_leaf(leaf):
+            continue
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        per_path[path] = leaf.density()
+        if isinstance(leaf, BSRWeight):
+            nnz += leaf.nnz_blocks
+            total += leaf.grid_k * leaf.grid_n
+        else:
+            nnz += sum(p.nnz_blocks for p in leaf.planes)
+            total += sum(p.grid_k * p.grid_n for p in leaf.planes)
+    return {
+        "per_path": per_path,
+        "nnz_blocks": int(nnz),
+        "total_blocks": int(total),
+        "density": nnz / max(total, 1),
+    }

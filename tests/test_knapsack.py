@@ -1,7 +1,11 @@
-"""Property + oracle tests for the MDKP solvers (paper Eq. 5-8)."""
+"""Property + oracle tests for the MDKP solvers (paper Eq. 5-8).
+
+Property tests run under hypothesis when installed and degrade to a
+deterministic fixed corpus otherwise (tests/_hyp.py).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import solve_brute, solve_dp, solve_greedy, solve_mdkp
 
@@ -73,6 +77,35 @@ def test_dp_matches_brute_1d(inst):
     r_b = solve_brute(v, w[:1], c[:1])
     assert np.all(w[:1] @ r_dp.x <= c[:1] + 1e-6)
     assert r_dp.value >= 0.95 * r_b.value - 1e-9
+
+
+def test_feasible_flag_tracks_capacity():
+    """feasible is computed from used <= capacity, not hardcoded True."""
+    v = np.array([1.0, 2.0, 3.0])
+    w = np.array([[1.0, 1.0, 1.0]])
+    for solver in (solve_dp, solve_greedy, solve_mdkp):
+        r = solver(v, w, np.array([2.0]))
+        assert r.feasible
+        assert np.all(r.used <= 2.0 + 1e-9)
+    # negative capacity: even the empty selection violates the constraint
+    r = solve_dp(v, w, np.array([-1.0]))
+    assert not r.x.any()
+    assert not r.feasible
+
+
+def test_dp_scaled_float_stays_feasible():
+    """Float weights take the FPTAS scaling (+ repair) path of solve_dp;
+    the result must satisfy the *real* (unscaled) constraint and say so."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = int(rng.integers(3, 14))
+        v = rng.uniform(0.0, 1.0, n)
+        w = rng.uniform(0.01, 1.0, (1, n))
+        c = w.sum(axis=1) * float(rng.uniform(0.1, 0.9))
+        r = solve_dp(v, w, c)
+        assert np.all(r.used <= c + 1e-9)
+        assert r.feasible
+        assert r.value == pytest.approx(float(v @ r.x))
 
 
 def test_greedy_zero_capacity():

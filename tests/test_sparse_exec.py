@@ -1,0 +1,180 @@
+"""Sparse execution layer: pack/unpack round-trips and packed-vs-dense
+logits equivalence through the full model stack (DESIGN.md §6).
+
+The fp32 ref BSR path reconstructs exactly the masked dense weight, so
+forward and decode logits on packed params must match the masked-dense
+execution to numerical noise — the end-to-end guarantee that lets the
+serving path swap in BSR kernels without touching the model code.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_smoke
+from repro.core import BlockingSpec, apply_masks, build_structures, masks_from_knapsack
+from repro.core.masks import _get_path
+from repro.core.packing import BSRWeight
+from repro.models import init_caches, init_params, lm_decode, lm_forward
+from repro.sparse import (
+    BSRPlanes,
+    knapsack_prune,
+    pack_params,
+    sparsity_summary,
+    unpack_params,
+)
+
+
+def _assert_trees_close(a, b, atol=1e-6):
+    flat_a = jax.tree_util.tree_leaves(a)
+    flat_b = jax.tree_util.tree_leaves(b)
+    assert len(flat_a) == len(flat_b)
+    for la, lb in zip(flat_a, flat_b):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+def test_pack_unpack_roundtrip_property():
+    """pack_params ∘ unpack_params == apply_masks over random selections
+    (deterministic corpus: mixed shapes, blockings, keep fractions)."""
+    rng = np.random.default_rng(0)
+    cases = [
+        ((96, 64), (16, 16), 0.6),
+        ((128, 128), (32, 32), 0.3),
+        ((100, 56), (32, 16), 0.5),   # ragged: blocks overhang both dims
+        ((64, 72), (64, 8), 0.8),
+        ((48, 48), (48, 48), 0.5),    # single-tile weight
+    ]
+    for (k, n), (bk, bn), keep in cases:
+        params = {
+            "layer": {"kernel": jnp.asarray(
+                rng.normal(size=(k, n)).astype(np.float32))},
+            "norm": {"scale": jnp.ones((n,), jnp.float32)},
+        }
+        structures = build_structures(
+            params, BlockingSpec(bk=bk, bn=bn), min_size=16)
+        sel = (rng.uniform(size=structures.total_structures) < keep
+               ).astype(np.float32)
+        masks = masks_from_knapsack(params, structures, sel)
+        packed = pack_params(params, masks, structures)
+        assert isinstance(packed["layer"]["kernel"], BSRWeight)
+        # untouched leaves pass through identically
+        assert packed["norm"]["scale"] is params["norm"]["scale"]
+        recon = unpack_params(packed)
+        masked = apply_masks(params, masks)
+        _assert_trees_close(recon, masked)
+
+
+def test_pack_unpack_roundtrip_planes():
+    """3-D expert weights pack to BSRPlanes and round-trip exactly."""
+    rng = np.random.default_rng(1)
+    params = {"moe": {"experts_up": jnp.asarray(
+        rng.normal(size=(4, 64, 48)).astype(np.float32))}}
+    structures = build_structures(params, BlockingSpec(bk=16, bn=16), min_size=16)
+    info = structures.infos[0]
+    assert info.planes == 4
+    sel = (rng.uniform(size=structures.total_structures) < 0.5).astype(np.float32)
+    masks = masks_from_knapsack(params, structures, sel)
+    packed = pack_params(params, masks, structures)
+    leaf = packed["moe"]["experts_up"]
+    assert isinstance(leaf, BSRPlanes) and len(leaf.planes) == 4
+    recon = unpack_params(packed)
+    masked = apply_masks(params, masks)
+    _assert_trees_close(recon, masked)
+
+
+def _pruned_pair(arch, *, sparsity=0.4, bk=32, bn=32, seed=0, **prune_kw):
+    """(cfg, masked-dense params, packed params) for a pruned smoke model."""
+    cfg = make_smoke(get_config(arch))
+    if cfg.moe_experts:
+        cfg = cfg.replace(capacity_factor=8.0)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    sel = knapsack_prune(
+        params, sparsity=sparsity, blocking=BlockingSpec(bk=bk, bn=bn),
+        min_size=1024, **prune_kw)
+    masked = apply_masks(params, sel.masks)
+    packed = pack_params(params, sel.masks, sel.structures)
+    assert 0 < sparsity_summary(packed)["density"] < 1
+    return cfg, masked, packed
+
+
+def test_lm_forward_packed_equals_masked_dense():
+    cfg, masked, packed = _pruned_pair("qwen1.5-0.5b")
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+    ld, _ = lm_forward(masked, {"tokens": tokens}, cfg)
+    lp, _ = lm_forward(packed, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(
+        np.asarray(lp), np.asarray(ld), atol=1e-3, rtol=1e-4)
+
+
+def test_lm_decode_packed_equals_masked_dense():
+    cfg, masked, packed = _pruned_pair("qwen1.5-0.5b")
+    b, steps = 2, 6
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, steps), 0, cfg.vocab)
+    caches_d = init_caches(cfg, b, steps + 1, jnp.float32)
+    caches_p = init_caches(cfg, b, steps + 1, jnp.float32)
+    for t in range(steps):
+        tok = tokens[:, t:t + 1]
+        ld, caches_d = lm_decode(masked, caches_d, {"tokens": tok},
+                                 jnp.asarray(t, jnp.int32), cfg)
+        lp, caches_p = lm_decode(packed, caches_p, {"tokens": tok},
+                                 jnp.asarray(t, jnp.int32), cfg)
+        np.testing.assert_allclose(
+            np.asarray(lp), np.asarray(ld), atol=1e-3, rtol=1e-4,
+            err_msg=f"decode step {t}")
+
+
+def test_lm_decode_packed_jits():
+    """The packed tree is a valid jit input (BSR leaves are pytrees)."""
+    cfg, _, packed = _pruned_pair("qwen1.5-0.5b")
+    b = 2
+    caches = init_caches(cfg, b, 4, jnp.float32)
+    decode = jax.jit(lambda p, c, t, l: lm_decode(p, c, {"tokens": t}, l, cfg))
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, caches = decode(packed, caches, tok, jnp.asarray(0, jnp.int32))
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_moe_packed_equals_masked_dense():
+    """Expert (plane) BSR path through the full MoE forward."""
+    cfg, masked, packed = _pruned_pair(
+        "granite-moe-1b-a400m", include=("moe", "mlp", "attn"))
+    assert any(
+        isinstance(leaf, BSRPlanes)
+        for leaf in jax.tree_util.tree_leaves(
+            packed, is_leaf=lambda x: isinstance(x, BSRPlanes))
+        if isinstance(leaf, BSRPlanes)
+    ), "expected at least one packed expert stack"
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab)
+    ld, _ = lm_forward(masked, {"tokens": tokens}, cfg)
+    lp, _ = lm_forward(packed, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(
+        np.asarray(lp), np.asarray(ld), atol=1e-3, rtol=1e-4)
+
+
+def test_unpack_is_masked_dense_oracle():
+    """unpack_params(pack_params(p, m)) == apply_masks(p, m) on the model."""
+    cfg = make_smoke(get_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    sel = knapsack_prune(params, sparsity=0.5,
+                         blocking=BlockingSpec(bk=32, bn=32), min_size=1024)
+    packed = pack_params(params, sel.masks, sel.structures)
+    recon = unpack_params(packed)
+    masked = apply_masks(params, sel.masks)
+    for info in sel.structures.infos:
+        np.testing.assert_allclose(
+            np.asarray(_get_path(recon, info.path)),
+            np.asarray(_get_path(masked, info.path)),
+            atol=1e-6, err_msg=info.path)
+
+
+def test_knapsack_prune_respects_budget():
+    cfg = make_smoke(get_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.PRNGKey(6), cfg)
+    sel = knapsack_prune(params, sparsity=0.5,
+                         blocking=BlockingSpec(bk=32, bn=32), min_size=1024)
+    assert sel.result.feasible
+    assert 0 < sel.kept < sel.total
+    with pytest.raises(ValueError):
+        knapsack_prune(params, sparsity=1.5,
+                       blocking=BlockingSpec(bk=32, bn=32))

@@ -1,9 +1,13 @@
-"""Structures, resource model (Eq. 1), masks, and packing invariants."""
+"""Structures, resource model (Eq. 1), masks, and packing invariants.
+
+Property tests run under hypothesis when installed and degrade to a
+deterministic fixed corpus otherwise (tests/_hyp.py).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     BlockingSpec,
