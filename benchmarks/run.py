@@ -14,14 +14,23 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true",
                     default=os.environ.get("QUICK") == "1")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,table5,kernels,knapsack")
+                    help="comma list: table2,table3,table5,kernels,knapsack,"
+                         "serving")
     args, _ = ap.parse_known_args()
 
-    from . import bench_kernels, bench_knapsack, table2_jets, table3_svhn, table5_lenet
+    from . import (
+        bench_kernels,
+        bench_knapsack,
+        bench_serving,
+        table2_jets,
+        table3_svhn,
+        table5_lenet,
+    )
 
     benches = {
         "knapsack": bench_knapsack.main,
         "kernels": bench_kernels.main,
+        "serving": bench_serving.main,
         "table2": table2_jets.main,
         "table3": table3_svhn.main,
         "table5": table5_lenet.main,

@@ -17,7 +17,13 @@ from repro.configs import get_config
 from repro.core import BlockingSpec, apply_masks
 from repro.core.masks import _get_path
 from repro.data import TokenTask
-from repro.models import init_caches, init_params, lm_decode
+from repro.models import (
+    init_caches,
+    init_params,
+    lm_decode,
+    lm_generate,
+    lm_prefill,
+)
 from repro.optim import AdamWConfig, constant_lr
 from repro.sparse import knapsack_prune, pack_params, sparsity_summary, unpack_params
 from repro.train import init_train_state, make_train_step
@@ -53,16 +59,20 @@ def main():
         print(f"  {path}: BSR density {d:.2f} "
               f"(skips {1-d:.0%} of MXU passes + HBM pages)")
 
-    # serve: greedy decode straight on the packed params
-    b, steps = 4, 16
-    caches = init_caches(cfg, b, steps + 1, jnp.float32)
-    tok = jnp.zeros((b, 1), jnp.int32)
-    out = []
-    for t in range(steps):
-        logits, caches = lm_decode(packed, caches, {"tokens": tok},
-                                   jnp.asarray(t, jnp.int32), cfg)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out.append(np.asarray(tok[:, 0]))
+    # serve through the hot path (DESIGN.md §7): batched prefill fills the
+    # caches in one jitted call, then ONE lax.scan greedy-decodes with the
+    # argmax on device — no host round-trip per token
+    b, plen, steps = 4, 8, 16
+    caches = init_caches(cfg, b, plen + steps, jnp.float32)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, plen), 0, cfg.vocab)
+    logits, caches = jax.jit(
+        lambda p, c, t: lm_prefill(p, c, {"tokens": t}, cfg)
+    )(packed, caches, prompt)
+    first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    tokens, caches = jax.jit(
+        lambda p, c, t, l: lm_generate(p, c, t, l, steps, cfg)
+    )(packed, caches, first, jnp.asarray(plen, jnp.int32))
+    tokens = np.asarray(tokens)          # the single host transfer
 
     # spot-check: the packed tree reconstructs to exactly masked dense,
     # and one decode step agrees between the two executions

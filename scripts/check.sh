@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
-# Smoke gate: deterministic test subset + the pruned-serving entrypoints.
+# Smoke gate: deterministic test subset + the pruned-serving entrypoints
+# + the serving benchmark (writes BENCH_serving.json).
 #
-# The full tier-1 command is `PYTHONPATH=src python -m pytest -x -q`; it
-# currently carries 7 known seed failures (jax version drift in
-# test_sharding_dryrun / test_substrate — see ROADMAP "Open items"), so
-# this gate runs the modules that must stay green plus the serving smoke.
+# The full tier-1 command is `PYTHONPATH=src python -m pytest -x -q`;
+# since PR 2 (jax-version gates in distributed/sharding.py) it should be
+# fully green on the container jax, so this gate is a fast subset.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -23,5 +23,10 @@ python examples/serve_pruned.py
 
 python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
     --pruned 0.5 --prompt-len 4 --gen 8
+
+# serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
+# (full default size on purpose — ~10s on CPU, and the committed numbers
+# should show the real packed-over-dense margin, which --quick thins out)
+python benchmarks/bench_serving.py
 
 echo "check.sh: OK"

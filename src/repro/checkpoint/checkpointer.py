@@ -69,6 +69,9 @@ class Checkpointer:
     # -- save ------------------------------------------------------------------
 
     def save(self, step: int, state: Any, *, blocking: bool = True) -> None:
+        # serialize with any in-flight async save: two writers racing on the
+        # same step dir turn rmtree/makedirs into FileExists/FileNotFound
+        self.wait()
         paths, leaves = _flatten_with_paths(state)
         # device->host snapshot (the only part that must block the step loop)
         host_leaves = [np.asarray(l) for l in leaves]
@@ -78,8 +81,8 @@ class Checkpointer:
             tmp = self._step_dir(step) + ".tmp"
             final = self._step_dir(step)
             if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
+                shutil.rmtree(tmp)       # stale .tmp from a crashed writer
+            os.makedirs(tmp, exist_ok=True)
             meta = {
                 "step": step,
                 "paths": paths,
@@ -101,7 +104,6 @@ class Checkpointer:
         if blocking:
             write()
         else:
-            self.wait()  # one in-flight save at a time
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
 

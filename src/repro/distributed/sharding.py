@@ -31,7 +31,68 @@ __all__ = [
     "param_pspecs",
     "named_sharding_tree",
     "current_rules",
+    "make_mesh",
+    "use_mesh",
+    "shard_map",
+    "cost_analysis",
+    "HAS_AXIS_TYPE",
 ]
+
+# ---------------------------------------------------------------------------
+# jax-version compatibility gate (AxisType landed after 0.4.x; set_mesh
+# likewise).  Everything downstream goes through these shims so the same
+# code runs on the pinned container jax and on current releases.
+# ---------------------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType as _AxisType  # type: ignore
+    HAS_AXIS_TYPE = True
+except ImportError:
+    _AxisType = None
+    HAS_AXIS_TYPE = False
+
+
+def make_mesh(shape, axes, *, devices=None) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types where supported."""
+    kwargs = {}
+    if HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (_AxisType.Auto,) * len(axes)
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """``jax.set_mesh`` when available, else the legacy ``with mesh:``
+    thread-resources context — either way ``_concrete_mesh`` sees it."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (check_vma) or the 0.4.x
+    ``jax.experimental.shard_map`` (check_rep), whichever is installed."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)
+
+
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """``Compiled.cost_analysis()`` normalized to a dict — pre-0.5 jax
+    returns a one-entry-per-program list."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 
@@ -83,7 +144,10 @@ def logical_constraint(x, *logical_axes: Optional[str]):
 
 
 def _current_mesh() -> Optional[Mesh]:
-    mesh = jax.sharding.get_abstract_mesh()
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except AttributeError:       # pre-set_mesh jax: thread resources only
+        return _concrete_mesh()
     if mesh is not None and not mesh.empty:
         # constraints accept PartitionSpec directly under set_mesh
         return _concrete_mesh() or mesh

@@ -29,7 +29,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bsr_matmul_kernel", "bsr_matmul_pallas"]
+__all__ = [
+    "bsr_matmul_kernel", "bsr_matmul_pallas",
+    "bsr_planes_matmul_kernel", "bsr_planes_matmul_pallas",
+]
 
 
 def bsr_matmul_kernel(idx_ref, x_ref, w_ref, o_ref):
@@ -94,3 +97,87 @@ def bsr_matmul_pallas(
         **kwargs,
     )(indices, x, blocks)
     return out[:m, :n].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-plane (expert) BSR matmul
+# ---------------------------------------------------------------------------
+
+def bsr_planes_matmul_kernel(idx_ref, x_ref, w_ref, o_ref):
+    """One grid step: o[e, i, j] += x[e, i, idx[e, j, s]] @ w[e, j, s].
+
+    Identical math to ``bsr_matmul_kernel`` with a *plane-offset* grid
+    dimension in front: plane ``e`` selects which expert's activations,
+    indices and blocks the step touches, so the whole per-plane stack is
+    one kernel launch instead of a python loop of E launches."""
+    e = pl.program_id(1)
+    j = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    live = idx_ref[e, j, s] >= 0
+
+    @pl.when(live)
+    def _accum():
+        o_ref[...] += jnp.dot(
+            x_ref[0], w_ref[0, 0, 0], preferred_element_type=jnp.float32
+        )[None]
+
+
+def bsr_planes_matmul_pallas(
+    x: jnp.ndarray,             # (E, M, K)
+    indices: jnp.ndarray,       # (E, grid_n, max_nnz) int32, -1 padded
+    blocks: jnp.ndarray,        # (E, grid_n, max_nnz, bk, bn)
+    *,
+    n: int,                     # logical N (<= grid_n * bn)
+    bm: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y[e] = x[e] @ W_bsr[e] in one fused launch, returns (E, M, n).
+
+    The flattened-planes layout (sparse/transform.BSRPlanes) pads every
+    plane's slot dim to the stack-wide ``max_nnz``; the per-plane offset
+    into the concatenated (E*grid_n) block-columns is implicit in the
+    (e, j) grid coordinates.  Padding slots are skipped with ``pl.when``
+    exactly like single-plane padding."""
+    e, m, k = x.shape
+    _, grid_n, max_nnz, bk, bn = blocks.shape
+    if k % bk:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, bk * ((k + bk - 1) // bk) - k)))
+    bm = min(bm, m)
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, 0), (0, pad_m), (0, 0)))
+    m_tiles = x.shape[1] // bm
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m_tiles, e, grid_n, max_nnz),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bm, bk),
+                lambda i, p, j, s, idx: (p, i, jnp.maximum(idx[p, j, s], 0)),
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, bk, bn), lambda i, p, j, s, idx: (p, j, s, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, p, j, s, idx: (p, i, j)),
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        )
+    out = pl.pallas_call(
+        bsr_planes_matmul_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (e, m_tiles * bm, grid_n * bn), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(indices, x, blocks)
+    return out[:, :m, :n].astype(x.dtype)

@@ -1,28 +1,39 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``use_pallas`` defaults to interpret-mode on CPU hosts (this container) and
-compiled mode on real TPU backends; the pure-jnp fallbacks are what the
-dry-run lowers (Pallas TPU kernels cannot target the CPU SPMD dry-run —
-see DESIGN.md §3).
+Mode dispatch (``mode=``):
+* ``auto``      — ref path off-TPU, compiled Pallas on TPU (serving default)
+* ``ref``       — pure-jnp zero-skipping oracle (kernels/ref.py)
+* ``pallas``    — compiled Pallas (TPU only)
+* ``interpret`` — the Pallas kernel under the interpreter, any backend —
+  this is how CI exercises the real kernel body on CPU hosts
+
+The ref path is itself zero-skipping (it contracts live blocks only, no
+densify — see kernels/ref.py), so CPU serving gets the same
+work-scales-with-density contract as the TPU kernel.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.packing import BSRWeight
-from .block_sparse_matmul import bsr_matmul_pallas
+from .block_sparse_matmul import bsr_matmul_pallas, bsr_planes_matmul_pallas
 from .structure_norms import structure_norms_pallas
 from . import ref as _ref
 
-__all__ = ["bsr_matmul", "structure_norms", "on_tpu"]
+__all__ = ["bsr_matmul", "bsr_planes_matmul", "structure_norms", "on_tpu"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _use_ref(mode: str) -> bool:
+    if mode not in ("auto", "ref", "pallas", "interpret"):
+        raise ValueError(f"unknown kernel mode {mode!r}")
+    return mode == "ref" or (mode == "auto" and not on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "mode"))
@@ -33,18 +44,45 @@ def bsr_matmul(
     bm: int = 128,
     mode: str = "auto",          # auto | pallas | interpret | ref
 ) -> jnp.ndarray:
-    """y = x @ W_bsr for x (..., K); skips pruned tiles on TPU."""
+    """y = x @ W_bsr for x (..., K); skips pruned tiles on every path."""
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
-    if mode == "ref" or (mode == "auto" and not on_tpu()):
+    if _use_ref(mode):
         y = _ref.bsr_matmul_ref(x2, bsr)
     else:
-        interpret = (mode == "interpret") or (mode == "auto" and not on_tpu())
         y = bsr_matmul_pallas(
-            x2, bsr.indices, bsr.blocks, n=bsr.shape[1], bm=bm, interpret=interpret
+            x2, bsr.indices, bsr.blocks, n=bsr.shape[1], bm=bm,
+            interpret=(mode == "interpret"),
         )
     return y.reshape(*lead, bsr.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bm", "mode"))
+def bsr_planes_matmul(
+    x: jnp.ndarray,              # (E, ..., K)
+    indices: jnp.ndarray,        # (E, grid_n, max_nnz)
+    blocks: jnp.ndarray,         # (E, grid_n, max_nnz, bk, bn)
+    *,
+    n: int,
+    bm: int = 128,
+    mode: str = "auto",
+) -> jnp.ndarray:
+    """Fused gather-free per-plane matmul: y[e] = x[e] @ W_bsr[e].
+
+    One call for the whole plane stack (the MoE expert dimension) —
+    no python loop over planes, no per-expert stack."""
+    e = x.shape[0]
+    lead = x.shape[1:-1]
+    k = x.shape[-1]
+    x3 = x.reshape(e, -1, k)
+    if _use_ref(mode):
+        y = _ref.bsr_planes_matmul_ref(x3, indices, blocks, n=n)
+    else:
+        y = bsr_planes_matmul_pallas(
+            x3, indices, blocks, n=n, bm=bm, interpret=(mode == "interpret")
+        )
+    return y.reshape(e, *lead, n)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "bn", "mode"))
@@ -52,7 +90,6 @@ def structure_norms(
     w: jnp.ndarray, *, bk: int = 128, bn: int = 128, mode: str = "auto"
 ) -> jnp.ndarray:
     """Tile L2 norms (grid_k, grid_n) fp32 for a (K, N) weight."""
-    if mode == "ref" or (mode == "auto" and not on_tpu()):
+    if _use_ref(mode):
         return _ref.structure_norms_ref(w, bk, bn)
-    interpret = (mode == "interpret") or (mode == "auto" and not on_tpu())
-    return structure_norms_pallas(w, bk=bk, bn=bn, interpret=interpret)
+    return structure_norms_pallas(w, bk=bk, bn=bn, interpret=(mode == "interpret"))

@@ -62,7 +62,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import SHAPES, get_config, input_specs, cell_applicable
-    from repro.distributed.sharding import axis_rules
+    from repro.distributed.sharding import axis_rules, use_mesh
     from repro.launch.mesh import make_production_mesh
     from repro.launch.roofline import analyze_compiled
     from repro.launch.specs import cell_shardings, rules_for_cell, tree_named
@@ -108,7 +108,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     from repro.optim.schedule import warmup_cosine
     lr = warmup_cosine(3e-4, 100, 10000)
 
-    with jax.set_mesh(mesh), axis_rules(rules):
+    with use_mesh(mesh), axis_rules(rules):
         if cell.kind == "train":
             step = make_train_step(cfg, opt_cfg, lr)
             in_sh = (tree_named(shardings["state"], mesh),

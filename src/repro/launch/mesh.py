@@ -11,9 +11,11 @@ import math
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_mesh_shape"]
+from repro.distributed.sharding import make_mesh
+
+__all__ = ["make_production_mesh", "make_mesh_shape", "make_test_mesh"]
 
 
 def make_mesh_shape(*, multi_pod: bool = False):
@@ -32,18 +34,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"visible — the dry-run sets XLA_FLAGS=--xla_force_host_platform_"
             f"device_count=512 before importing jax (launch/dryrun.py)."
         )
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(AxisType.Auto,) * len(axes),
-        devices=devices[:n],
-    )
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     """Small mesh for CPU unit tests (8 forced host devices)."""
     n = math.prod(shape)
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(AxisType.Auto,) * len(axes),
-        devices=jax.devices()[:n],
-    )
+    return make_mesh(shape, axes, devices=jax.devices()[:n])

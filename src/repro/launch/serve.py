@@ -1,15 +1,23 @@
-"""Serving launcher: batched greedy decoding with KV/SSM caches.
+"""Serving launcher: batched prefill + on-device greedy decode loop.
 
 ``python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --batch 4
 --prompt-len 16 --gen 32``
 
-Runs prefill (forward over the prompt, filling caches) then the decode
-loop.  ``--pruned <sparsity>`` turns on the sparse execution layer
-(DESIGN.md §6): the model is knapsack-pruned at ``--block bk,bn`` tile
-granularity, packed to BSR, and every decode matmul skips pruned tiles
-via the ``models/layers.matmul`` dispatch (ref path on CPU, compiled
-Pallas on TPU).  On a real fleet, add ``--mesh single|multi`` for the
-production placement.
+The hot path is two jitted calls (DESIGN.md §7):
+
+1. **prefill** — one ``lm_prefill`` pass over the whole prompt fills every
+   KV/SSM cache and yields the first generated token (argmax on device);
+2. **decode** — one ``lm_generate`` call runs the entire greedy loop as a
+   ``jax.lax.scan`` with the caches in the carry: N tokens, zero host
+   round-trips, one device->host transfer at the end.
+
+``--pruned <sparsity>`` turns on the sparse execution layer (DESIGN.md
+§6/§7): the model is knapsack-pruned at ``--block bk,bn`` tile
+granularity, packed to BSR, and every matmul on both calls skips pruned
+tiles via the ``models/layers.matmul`` dispatch (zero-skipping ref path
+on CPU, compiled Pallas on TPU; MoE experts go through the fused
+flattened-planes kernel).  On a real fleet, add ``--mesh single|multi``
+for the production placement.
 """
 import argparse
 import sys
@@ -38,7 +46,7 @@ def main() -> int:
     import numpy as np
 
     from repro.configs import get_config, make_smoke
-    from repro.models import init_caches, init_params, lm_decode, lm_forward
+    from repro.models import init_caches, init_params, lm_generate, lm_prefill
     from repro.models.transformer import encode_kv_caches, encoder_forward
 
     cfg = get_config(args.arch)
@@ -79,31 +87,46 @@ def main() -> int:
         enc = encoder_forward(params, frames, cfg)
         caches = encode_kv_caches(params, enc, cfg, caches)
 
-    # prefill: feed prompt tokens one by one through the decode path
-    # (prefill-by-decode keeps the example simple; launch/dryrun.py lowers
-    # the batched prefill step for the assigned prefill cells)
-    decode = jax.jit(lambda p, c, t, l: lm_decode(p, c, {"tokens": t}, l, cfg))
+    # prefill: ONE lm_prefill call over the whole prompt fills the caches
+    # and produces the first token — not prompt_len decode steps
+    @jax.jit
+    def prefill(p, c, toks):
+        logits, c = lm_prefill(p, c, {"tokens": toks}, cfg)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return tok, c
+
+    # decode: ONE lm_generate call (lax.scan) emits every token on device
+    generate = jax.jit(
+        lambda p, c, t, l: lm_generate(p, c, t, l, args.gen, cfg))
+
+    # warm both calls once (trace + XLA compile) so the printed numbers
+    # measure steady-state serving, not compilation
+    if plen > 0:
+        wtok, wcaches = prefill(params, caches, prompt)
+    else:
+        wtok, wcaches = jnp.zeros((b, 1), jnp.int32), caches
+    jax.block_until_ready(
+        generate(params, wcaches, wtok, jnp.asarray(plen, jnp.int32)))
+
     t0 = time.time()
     if plen > 0:
-        for i in range(plen):
-            logits, caches = decode(params, caches, prompt[:, i:i + 1],
-                                    jnp.asarray(i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        tok, caches = prefill(params, caches, prompt)
     else:
         # empty prompt: start generation from token 0 (a stand-in BOS)
         tok = jnp.zeros((b, 1), jnp.int32)
-    out_tokens = []
-    for i in range(args.gen):
-        out_tokens.append(np.asarray(tok)[:, 0])
-        logits, caches = decode(params, caches, tok,
-                                jnp.asarray(plen + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    t1 = time.time()
+    tokens, caches = generate(params, caches, tok, jnp.asarray(plen, jnp.int32))
+    gen = np.asarray(tokens)          # the single host transfer
+    dt_dec = max(time.time() - t1, 1e-9)
     dt = max(time.time() - t0, 1e-9)
-    gen = (np.stack(out_tokens, axis=1) if out_tokens
-           else np.zeros((b, 0), np.int32))
+
     print(f"generated {gen.shape} tokens in {dt:.2f}s "
-          f"({args.gen * b / dt:.1f} tok/s aggregate)")
-    if out_tokens:
+          f"(prefill {t_prefill * 1e3:.1f}ms, decode "
+          f"{args.gen * b / dt_dec:.1f} tok/s aggregate)")
+    if gen.shape[1]:
         print("sample:", gen[0][:16])
     return 0
 

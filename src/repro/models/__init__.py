@@ -9,11 +9,14 @@ from .transformer import (
     layer_specs,
     lm_decode,
     lm_forward,
+    lm_generate,
+    lm_prefill,
 )
 from .cnn import PAPER_MODELS, paper_model
 
 __all__ = [
     "LayerSpec", "cross_entropy_loss", "encode_kv_caches", "encoder_forward",
     "init_caches", "init_params", "layer_specs", "lm_decode", "lm_forward",
+    "lm_generate", "lm_prefill",
     "PAPER_MODELS", "paper_model",
 ]

@@ -28,7 +28,9 @@ from .layers import apply_mrope, apply_rope, dense, dense_init
 __all__ = [
     "attention_init",
     "attention_apply",
+    "attention_prefill",
     "attention_decode",
+    "cross_attention_prefill",
     "chunked_causal_attention",
     "full_attention",
     "init_kv_cache",
@@ -160,6 +162,14 @@ def attention_apply(
             k = apply_rope(k, positions, theta=rope_theta)
     o = chunked_causal_attention(q, k, v, causal=causal, window=window, chunk=chunk)
     o = logical_constraint(o, "batch", "seq", "heads", None)
+    out = _wo_project(p, o, num_heads, head_dim, accum, x.dtype)
+    return logical_constraint(out, "batch", out_seq, "embed")
+
+
+def _wo_project(p: Dict, o: jnp.ndarray, num_heads: int, head_dim: int,
+                accum, dtype) -> jnp.ndarray:
+    """Output projection for (B, S, H, dh) attention values."""
+    b, s = o.shape[:2]
     if "bias" not in p["wo"] and not isinstance(p["wo"]["kernel"], BSRWeight):
         # contract (heads, dh) via a kernel-side reshape: reshaping the
         # *activation* (B,S,H,dh)->(B,S,H*dh) merges the heads-sharded dim
@@ -169,11 +179,86 @@ def attention_apply(
         # kernel has no dense (H*dh, D) view, so it takes the dispatch
         # path below — serving-only, where the all-gather concern is moot.
         w3 = p["wo"]["kernel"].reshape(num_heads, head_dim, -1)
-        out = jnp.einsum("bshd,hde->bse", o, w3,
-                         preferred_element_type=accum).astype(x.dtype)
-    else:
-        out = dense(p["wo"], o.reshape(b, s, num_heads * head_dim), accum=accum)
-    return logical_constraint(out, "batch", out_seq, "embed")
+        return jnp.einsum("bshd,hde->bse", o, w3,
+                          preferred_element_type=accum).astype(dtype)
+    return dense(p["wo"], o.reshape(b, s, num_heads * head_dim), accum=accum)
+
+
+def attention_prefill(
+    p: Dict,
+    x: jnp.ndarray,                       # (B, S, D)
+    cache: Dict[str, jnp.ndarray],
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    positions: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    rope_theta: float = 10000.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    use_rope: bool = True,
+    accum=None,
+    out_seq: str = "seq",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Batched causal prefill that also fills the KV cache.
+
+    Runs the full-sequence attention (identical math to
+    ``attention_apply``) and writes the (rotated) K/V for positions
+    ``[0, S)`` into the cache so decode can continue at ``cache_len=S``.
+    With a sliding-window ring cache (alloc <= window) only the last
+    ``alloc`` tokens are kept, each at slot ``t % alloc`` — the same
+    placement the per-token decode writes produce."""
+    accum = accum or jnp.float32
+    b, s, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), num_heads)
+    k = _split_heads(dense(p["wk"], x), kv_heads)
+    v = _split_heads(dense(p["wv"], x), kv_heads)
+    if use_rope:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if mrope_sections is not None:
+            if positions.ndim == 2:
+                positions = jnp.tile(positions[..., None], (1, 1, 3))
+            q = apply_mrope(q, positions, mrope_sections, theta=rope_theta)
+            k = apply_mrope(k, positions, mrope_sections, theta=rope_theta)
+        else:
+            q = apply_rope(q, positions, theta=rope_theta)
+            k = apply_rope(k, positions, theta=rope_theta)
+
+    o = chunked_causal_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    out = _wo_project(p, o, num_heads, head_dim, accum, x.dtype)
+    out = logical_constraint(out, "batch", out_seq, "embed")
+
+    alloc = cache["k"].shape[1]
+    kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if s <= alloc:
+        ck = jax.lax.dynamic_update_slice(cache["k"], kc, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vc, (0, 0, 0, 0))
+    else:  # ring: keep the last `alloc` tokens at their decode slots
+        slots = jnp.arange(s - alloc, s) % alloc
+        ck = cache["k"].at[:, slots].set(kc[:, s - alloc:])
+        cv = cache["v"].at[:, slots].set(vc[:, s - alloc:])
+    return out, {**cache, "k": ck, "v": cv}
+
+
+def cross_attention_prefill(
+    p: Dict,
+    x: jnp.ndarray,                       # (B, S, D) — normed decoder stream
+    cache: Dict[str, jnp.ndarray],        # holds cross_k / cross_v
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Full-sequence cross-attention over precomputed encoder K/V."""
+    q = _split_heads(dense(p["wq"], x), num_heads)
+    o = chunked_causal_attention(
+        q, cache["cross_k"].astype(q.dtype), cache["cross_v"].astype(q.dtype),
+        causal=False, window=None, chunk=chunk,
+    )
+    return _wo_project(p, o, num_heads, head_dim, jnp.float32, x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +286,7 @@ def attention_decode(
     window: Optional[int] = None,
     rope_theta: float = 10000.0,
     mrope_sections: Optional[Tuple[int, ...]] = None,
+    use_rope: bool = True,
     update_cache: bool = True,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One-token decode over a (possibly seq-sharded) KV cache.
@@ -219,11 +305,11 @@ def attention_decode(
         write_pos = cache_len % max_len if ring else cache_len
         knew = _split_heads(dense(p["wk"], x), kv_heads)
         vnew = _split_heads(dense(p["wv"], x), kv_heads)
-        if mrope_sections is not None:
+        if use_rope and mrope_sections is not None:
             pos3 = jnp.tile(pos[..., None], (1, 1, 3))
             q = apply_mrope(q, pos3, mrope_sections, theta=rope_theta)
             knew = apply_mrope(knew, pos3, mrope_sections, theta=rope_theta)
-        else:
+        elif use_rope:
             q = apply_rope(q, pos, theta=rope_theta)
             knew = apply_rope(knew, pos, theta=rope_theta)
         ck = jax.lax.dynamic_update_slice(

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.packing import BSRWeight
 from repro.distributed.sharding import logical_constraint
-from repro.kernels.ops import bsr_matmul
+from repro.kernels.ops import bsr_matmul, bsr_planes_matmul
 from repro.sparse.transform import BSRPlanes
 
 __all__ = [
@@ -79,13 +79,15 @@ def matmul(x: jnp.ndarray, w, *, accum=jnp.float32) -> jnp.ndarray:
 def expert_matmul(h: jnp.ndarray, w, *, accum=jnp.float32) -> jnp.ndarray:
     """Batched expert matmul (g, E, C, d) @ (E, d, f) -> (g, E, C, f).
 
-    ``BSRPlanes`` (per-expert BSR stacks) run one zero-skipping matmul per
-    plane — a fully-pruned expert costs a single padding slot; dense 3-D
-    weights take the batched einsum."""
+    ``BSRPlanes`` (flattened per-expert BSR) issue ONE fused zero-skipping
+    kernel call over the whole plane stack — no python loop over experts,
+    no per-expert output stack; a fully-pruned expert costs only its
+    skipped padding slots.  Dense 3-D weights take the batched einsum."""
     if isinstance(w, BSRPlanes):
-        outs = [matmul(h[:, e], plane, accum=accum)
-                for e, plane in enumerate(w.planes)]
-        return jnp.stack(outs, axis=1)
+        g, e, c, d = h.shape
+        he = jnp.moveaxis(h, 1, 0)                            # (E, g, C, d)
+        y = bsr_planes_matmul(he, w.indices, w.blocks, n=w.shape[-1])
+        return jnp.moveaxis(y, 0, 1).astype(accum)            # (g, E, C, f)
     return jnp.einsum("gecd,edf->gecf", h, w, preferred_element_type=accum)
 
 

@@ -24,8 +24,8 @@ import jax.numpy as jnp
 from repro.distributed.sharding import logical_constraint
 from .layers import dense, dense_init, truncated_normal_init
 
-__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "init_mamba_cache",
-           "CHUNK_UNROLL_LIMIT"]
+__all__ = ["mamba_init", "mamba_apply", "mamba_prefill", "mamba_decode",
+           "init_mamba_cache", "CHUNK_UNROLL_LIMIT"]
 
 CHUNK_UNROLL_LIMIT = 4  # above this, chunk loop becomes lax.scan (roofline supplement
                         # counts it); scan bounds live memory to one chunk
@@ -106,20 +106,24 @@ def _ssm_chunk(h0, dt, bm, cm, x, a):
     return y, h[:, -1]
 
 
-def mamba_apply(p: Dict, x: jnp.ndarray, *, chunk: int = 256) -> jnp.ndarray:
-    """Training/prefill forward, x (B,S,D) -> (B,S,D)."""
+def _mamba_forward(
+    p: Dict, x: jnp.ndarray, conv_state: Optional[jnp.ndarray],
+    ssm_state: Optional[jnp.ndarray], *, chunk: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward returning (out, conv_state, ssm_state)."""
     b, s, _ = x.shape
     xz = dense(p["in_proj"], x)
     xi, z = jnp.split(xz, 2, axis=-1)                               # (B,S,di)
     xi = logical_constraint(xi, "batch", "seq", "mlp")
-    xi, _ = _causal_conv(xi, p["conv_kernel"], p["conv_bias_vec"])
+    xi, conv_state = _causal_conv(xi, p["conv_kernel"], p["conv_bias_vec"],
+                                  state=conv_state)
     xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
 
     a = -jnp.exp(p["a_log"])                                        # (di,N)
     di, n = a.shape
     chunk = min(chunk, s)
     n_chunks = -(-s // chunk)
-    h = jnp.zeros((b, di, n), jnp.float32)
+    h = ssm_state if ssm_state is not None else jnp.zeros((b, di, n), jnp.float32)
 
     if n_chunks <= CHUNK_UNROLL_LIMIT or s % chunk != 0:
         ys = []
@@ -148,7 +152,21 @@ def mamba_apply(p: Dict, x: jnp.ndarray, *, chunk: int = 256) -> jnp.ndarray:
 
     y = y + xi.astype(jnp.float32) * p["d_skip"][None, None]
     y = y * jax.nn.silu(z.astype(jnp.float32))
-    return dense(p["out_proj"], y.astype(x.dtype))
+    return dense(p["out_proj"], y.astype(x.dtype)), conv_state, h
+
+
+def mamba_apply(p: Dict, x: jnp.ndarray, *, chunk: int = 256) -> jnp.ndarray:
+    """Training forward, x (B,S,D) -> (B,S,D)."""
+    return _mamba_forward(p, x, None, None, chunk=chunk)[0]
+
+
+def mamba_prefill(p: Dict, x: jnp.ndarray, cache: Dict, *, chunk: int = 256
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """Batched prefill: full-sequence forward that also returns the decode
+    cache (last K-1 conv inputs + final SSM state)."""
+    out, conv_state, h = _mamba_forward(
+        p, x, cache["conv"].astype(x.dtype), cache["ssm"], chunk=chunk)
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import _concrete_mesh, current_rules
+from repro.distributed.sharding import _concrete_mesh, current_rules, shard_map
 
 __all__ = ["moe_alltoall_apply", "alltoall_available"]
 
@@ -44,10 +44,12 @@ def alltoall_available(num_experts: int) -> bool:
 
 
 def _local_moe(x_loc, p, *, num_experts, top_k, capacity_factor, activation,
-               model_axis, dp_axes):
+               model_axis, model_size, dp_axes):
     """Per-shard body. x_loc (T, d) local tokens."""
     t, d = x_loc.shape
-    m = jax.lax.axis_size(model_axis)
+    # static axis size threaded from the caller's mesh (jax.lax.axis_size
+    # is post-0.4.x, and the value feeds python-level shape math anyway)
+    m = model_size
     e_loc = num_experts // m
     c_send = max(int(math.ceil(t * top_k * capacity_factor / m)), top_k)
     c_exp = max(int(math.ceil(m * c_send / e_loc)), 1)
@@ -149,7 +151,8 @@ def moe_alltoall_apply(
     body = partial(
         _local_moe, num_experts=num_experts, top_k=top_k,
         capacity_factor=capacity_factor, activation=activation,
-        model_axis="model", dp_axes=dp_axes,
+        model_axis="model", model_size=int(mesh.shape["model"]),
+        dp_axes=dp_axes,
     )
 
     def wrapped(xs, params):
@@ -166,10 +169,10 @@ def moe_alltoall_apply(
         pspec["experts_gate"] = P("model", None, None)
     xspec = P(dp_axes if dp_axes else None, None, None)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         wrapped, mesh=mesh,
         in_specs=(xspec, pspec),
         out_specs=(xspec, P()),
-        check_vma=False,
+        check=False,
     )
     return fn(x, p)

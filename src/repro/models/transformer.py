@@ -38,6 +38,8 @@ from .attention import (
     attention_apply,
     attention_decode,
     attention_init,
+    attention_prefill,
+    cross_attention_prefill,
     init_kv_cache,
 )
 from .ffn import mlp_apply, mlp_init
@@ -53,7 +55,13 @@ from .layers import (
     sinusoidal_positions,
     unembed_logits,
 )
-from .mamba import init_mamba_cache, mamba_apply, mamba_decode, mamba_init
+from .mamba import (
+    init_mamba_cache,
+    mamba_apply,
+    mamba_decode,
+    mamba_init,
+    mamba_prefill,
+)
 from .moe import moe_apply, moe_decode, moe_init
 from .moe_alltoall import alltoall_available, moe_alltoall_apply
 from .xlstm import (
@@ -62,14 +70,17 @@ from .xlstm import (
     mlstm_apply,
     mlstm_decode,
     mlstm_init,
+    mlstm_prefill,
     slstm_apply,
     slstm_decode,
     slstm_init,
+    slstm_prefill,
 )
 
 __all__ = [
     "LayerSpec", "layer_specs", "init_params", "lm_forward", "lm_decode",
-    "init_caches", "encoder_forward", "encode_kv_caches", "cross_entropy_loss",
+    "lm_prefill", "lm_generate", "init_caches", "encoder_forward",
+    "encode_kv_caches", "cross_entropy_loss",
 ]
 
 
@@ -215,6 +226,7 @@ def init_params(key, cfg: ModelConfig) -> Dict:
 def _apply_mixer(
     p: Dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
     positions, enc_out: Optional[jnp.ndarray],
+    raw_x: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     if spec.mixer == "attn":
         h = attention_apply(
@@ -226,7 +238,11 @@ def _apply_mixer(
             accum=_accum(cfg), out_seq=_out_seq(cfg),
         )
         if spec.cross_attn and enc_out is not None:
-            xc = _norm_apply(cfg, p["cross_norm"], x + h)
+            # cross-attn reads the RAW residual + self-attn output (the
+            # whisper pre-norm dataflow, and what the decode path does) —
+            # not the pre-normed x this function received
+            base = raw_x if raw_x is not None else x
+            xc = _norm_apply(cfg, p["cross_norm"], base + h)
             hc = attention_apply(
                 p["cross"], xc,
                 num_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.head_dim_(),
@@ -251,7 +267,8 @@ def _apply_layer(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Pre-norm residual layer. Returns (x, moe_aux)."""
     aux = jnp.zeros((), jnp.float32)
-    h = _apply_mixer(p, spec, cfg, _norm_apply(cfg, p["pre_norm"], x), positions, enc_out)
+    h = _apply_mixer(p, spec, cfg, _norm_apply(cfg, p["pre_norm"], x),
+                     positions, enc_out, raw_x=x)
     x = _residual(cfg, x + h)
     if spec.mlp == "dense":
         x = x + mlp_apply(p["mlp"], _norm_apply(cfg, p["post_norm"], x),
@@ -440,6 +457,7 @@ def lm_decode(
                 num_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
                 head_dim=cfg.head_dim_(), window=cfg.window,
                 rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+                use_rope=spec.use_rope,
             )
             cache = {**cache, **cache2}
             if spec.cross_attn:
@@ -475,3 +493,135 @@ def lm_decode(
     head = params.get("lm_head", params["embed"])
     logits = unembed_logits(head, x)
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Serving hot path: batched prefill + on-device decode loop (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def lm_prefill(
+    params: Dict,
+    caches: List[Dict],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, List[Dict]]:
+    """Cache-filling batched prefill: one `lm_forward`-style pass over the
+    whole prompt that also fills every KV/SSM cache, replacing
+    ``prompt_len`` sequential decode steps.  batch["tokens"] (B, S).
+    Returns (fp32 logits (B, S, V), caches ready for ``cache_len=S``).
+
+    Runs unchanged on packed (BSR) params — every matmul routes through
+    the ``layers.matmul`` / ``layers.expert_matmul`` dispatch points."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, dtype=cfg.adtype)
+
+    if cfg.num_patches > 0 and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.adtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+
+    positions = batch.get("positions")
+    if positions is None:
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, 3))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    specs = layer_specs(cfg)
+    if cfg.enc_layers > 0:
+        specs = [LayerSpec(mixer="attn", mlp="dense", cross_attn=True,
+                           use_rope=cfg.use_rope)] * cfg.n_layers
+
+    # mirrors _apply_layer (which cannot thread caches) — keep residual
+    # sharding, out_seq and the MoE impl dispatch in sync with it
+    x = logical_constraint(x, "batch", "seq", "embed")
+    new_caches: List[Dict] = []
+    for lp, spec, cache in zip(params["layers"], specs, caches):
+        h_in = _norm_apply(cfg, lp["pre_norm"], x)
+        if spec.mixer == "attn":
+            h, cache = attention_prefill(
+                lp["attn"], h_in, cache,
+                num_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                head_dim=cfg.head_dim_(), positions=positions,
+                window=cfg.window, chunk=cfg.attn_chunk,
+                rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+                use_rope=spec.use_rope, accum=_accum(cfg),
+                out_seq=_out_seq(cfg),
+            )
+            if spec.cross_attn:
+                xc = _norm_apply(cfg, lp["cross_norm"], x + h)
+                hc = cross_attention_prefill(
+                    lp["cross"], xc, cache,
+                    num_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                    head_dim=cfg.head_dim_(), chunk=cfg.attn_chunk,
+                )
+                h = h + hc
+        elif spec.mixer == "mamba":
+            h, cache = mamba_prefill(lp["mamba"], h_in, cache, chunk=cfg.ssm_chunk)
+        elif spec.mixer == "mlstm":
+            h, cache = mlstm_prefill(lp["mlstm"], h_in, cache,
+                                     num_heads=cfg.n_heads, chunk=cfg.ssm_chunk)
+        elif spec.mixer == "slstm":
+            h, cache = slstm_prefill(lp["slstm"], h_in, cache,
+                                     num_heads=cfg.n_heads)
+        else:
+            h = jnp.zeros_like(x)
+        x = _residual(cfg, x + h)
+        if spec.mlp == "dense":
+            x = x + mlp_apply(lp["mlp"], _norm_apply(cfg, lp["post_norm"], x),
+                              activation=cfg.activation, accum=_accum(cfg),
+                              out_seq=_out_seq(cfg))
+            x = _residual(cfg, x)
+        elif spec.mlp == "moe":
+            xn = _norm_apply(cfg, lp["post_norm"], x)
+            if cfg.moe_impl == "alltoall" and alltoall_available(cfg.moe_experts):
+                y, _ = moe_alltoall_apply(
+                    lp["moe"], xn,
+                    num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    activation=cfg.activation)
+            else:
+                y, _ = moe_apply(
+                    lp["moe"], xn,
+                    num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    activation=cfg.activation)
+            x = _residual(cfg, x + y)
+        new_caches.append(cache)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed_logits(head, x)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return logits, new_caches
+
+
+def lm_generate(
+    params: Dict,
+    caches: List[Dict],
+    first_token: jnp.ndarray,       # (B, 1) int32 — usually argmax of prefill
+    start_len: jnp.ndarray,         # scalar int32: tokens already in cache
+    num_tokens: int,                # static: tokens to emit
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, List[Dict]]:
+    """On-device greedy decode loop: ``num_tokens`` steps in ONE
+    ``jax.lax.scan`` — the caches ride the carry and the argmax happens on
+    device, so there is zero host transfer per generated token.
+
+    Emits the running token *before* each decode step (so
+    ``tokens[:, 0] == first_token``), matching the per-token serve loop it
+    replaces.  Returns (tokens (B, num_tokens) int32, caches)."""
+    start_len = jnp.asarray(start_len, jnp.int32)
+
+    def step(carry, i):
+        tok, cs = carry
+        logits, cs = lm_decode(params, cs, {"tokens": tok}, start_len + i, cfg)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return (nxt, cs), tok[:, 0]
+
+    (_, caches), toks = jax.lax.scan(
+        step, (first_token.astype(jnp.int32), caches),
+        jnp.arange(num_tokens, dtype=jnp.int32),
+    )
+    return jnp.moveaxis(toks, 0, 1), caches

@@ -28,8 +28,10 @@ from repro.distributed.sharding import logical_constraint
 from .layers import dense, dense_init, layernorm, layernorm_init, truncated_normal_init
 
 __all__ = [
-    "mlstm_init", "mlstm_apply", "mlstm_decode", "init_mlstm_cache",
-    "slstm_init", "slstm_apply", "slstm_decode", "init_slstm_cache",
+    "mlstm_init", "mlstm_apply", "mlstm_prefill", "mlstm_decode",
+    "init_mlstm_cache",
+    "slstm_init", "slstm_apply", "slstm_prefill", "slstm_decode",
+    "init_slstm_cache",
     "CHUNK_UNROLL_LIMIT",
 ]
 
@@ -113,6 +115,19 @@ def _heads(x, h):
 
 def mlstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int,
                 chunk: int = 256) -> jnp.ndarray:
+    return _mlstm_forward(p, x, None, num_heads=num_heads, chunk=chunk)[0]
+
+
+def mlstm_prefill(p: Dict, x: jnp.ndarray, cache: Dict, *, num_heads: int,
+                  chunk: int = 256) -> Tuple[jnp.ndarray, Dict]:
+    """Batched prefill: chunked-parallel forward + final (C, n, m) cache."""
+    carry = (cache["C"], cache["n"], cache["m"])
+    out, (C, n, m) = _mlstm_forward(p, x, carry, num_heads=num_heads, chunk=chunk)
+    return out, {"C": C, "n": n, "m": m}
+
+
+def _mlstm_forward(p: Dict, x: jnp.ndarray, carry, *, num_heads: int,
+                   chunk: int = 256):
     b, s, _ = x.shape
     xin = dense(p["up_proj"], x)
     gate = dense(p["gate_proj"], x)
@@ -131,11 +146,12 @@ def mlstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int,
 
     chunk = min(chunk, s)
     n_chunks = -(-s // chunk)
-    carry = (
-        jnp.zeros((b, num_heads, dh, dh), jnp.float32),
-        jnp.zeros((b, num_heads, dh), jnp.float32),
-        jnp.full((b, num_heads), -1e30, jnp.float32),
-    )
+    if carry is None:
+        carry = (
+            jnp.zeros((b, num_heads, dh, dh), jnp.float32),
+            jnp.zeros((b, num_heads, dh), jnp.float32),
+            jnp.full((b, num_heads), -1e30, jnp.float32),
+        )
     if n_chunks <= CHUNK_UNROLL_LIMIT or s % chunk != 0:
         hs = []
         for c0 in range(0, s, chunk):
@@ -154,7 +170,7 @@ def mlstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int,
             return c, hid
 
         split = lambda t, ax: jnp.stack(jnp.split(t, n_chunks, axis=ax))
-        _, hr = jax.lax.scan(
+        carry, hr = jax.lax.scan(
             body, carry,
             (split(q, 2), split(k, 2), split(v, 2), split(ig, 2), split(fg, 2)),
         )
@@ -162,7 +178,7 @@ def mlstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int,
 
     out = hid.transpose(0, 2, 1, 3).reshape(b, s, d_in).astype(x.dtype)
     out = out * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
-    return dense(p["down_proj"], out)
+    return dense(p["down_proj"], out), carry
 
 
 def init_mlstm_cache(batch: int, num_heads: int, head_dim: int) -> Dict:
@@ -247,21 +263,33 @@ def _slstm_step(state, wx_t, r_rec, num_heads):
     return (c_new, n_new, h_new, m_new), h_new
 
 
-def slstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int) -> jnp.ndarray:
+def _slstm_forward(p: Dict, x: jnp.ndarray, state, *, num_heads: int):
     """Sequential sLSTM over seq; scan body is recurrent-matmul only."""
     b, s, d = x.shape
     wx = dense(p["w_in"], x).astype(jnp.float32)                    # (B,S,4d)
-    state = init_slstm_cache(b, d)
-    state = tuple(state[k] for k in ("c", "n", "h", "m"))
 
     def body(st, wx_t):
         return _slstm_step(st, wx_t, p["r_rec"], num_heads)
 
-    _, hs = jax.lax.scan(body, state, wx.transpose(1, 0, 2))        # (S,B,d)
+    state, hs = jax.lax.scan(body, state, wx.transpose(1, 0, 2))    # (S,B,d)
     out = hs.transpose(1, 0, 2).astype(x.dtype)
     h2 = dense(p["up"], out)
     h2 = jax.nn.gelu(h2.astype(jnp.float32)).astype(x.dtype)
-    return dense(p["down"], h2)
+    return dense(p["down"], h2), state
+
+
+def slstm_apply(p: Dict, x: jnp.ndarray, *, num_heads: int) -> jnp.ndarray:
+    state = init_slstm_cache(x.shape[0], x.shape[2])
+    state = tuple(state[k] for k in ("c", "n", "h", "m"))
+    return _slstm_forward(p, x, state, num_heads=num_heads)[0]
+
+
+def slstm_prefill(p: Dict, x: jnp.ndarray, cache: Dict, *, num_heads: int
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """Batched prefill: sequence scan that also returns the final state."""
+    state = tuple(cache[k] for k in ("c", "n", "h", "m"))
+    out, (c, n, h, m) = _slstm_forward(p, x, state, num_heads=num_heads)
+    return out, {"c": c, "n": n, "h": h, "m": m}
 
 
 def init_slstm_cache(batch: int, d_model: int) -> Dict:

@@ -57,7 +57,7 @@ def compressed_psum_tree(grads, errors, mesh, axis_name: str = "pod",
     if axis_name not in mesh.axis_names or mesh.shape[axis_name] == 1:
         return grads, errors
 
-    shard_map = jax.shard_map
+    from repro.distributed.sharding import shard_map
 
     flat_g, td = jax.tree.flatten(grads)
     flat_e = td.flatten_up_to(errors)
@@ -71,7 +71,7 @@ def compressed_psum_tree(grads, errors, mesh, axis_name: str = "pod",
         fn = shard_map(
             lambda gs, es: compressed_psum(gs, es, axis_name),
             mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
-            check_vma=False,
+            check=False,
         )
         out.append(fn(g, e))
     return (

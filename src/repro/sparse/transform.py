@@ -36,28 +36,81 @@ __all__ = [
 
 @dataclasses.dataclass
 class BSRPlanes:
-    """Per-plane BSR stack for a >2-D weight (e.g. MoE (E, D, F) experts).
+    """Flattened per-plane BSR stack for a >2-D weight (MoE (E, D, F)).
 
-    Each plane is an independent ``BSRWeight`` over the trailing (K, N)
-    dims; pruning all tiles of a plane removes the whole expert — the
-    paper's coarse structure.  Planes keep their own ``max_nnz`` so a
-    nearly-dead expert costs almost nothing in the matmul loop.
+    The per-plane ``(indices, blocks)`` pairs are concatenated into ONE
+    BSR: the slot dim is padded to the stack-wide ``max_nnz`` and the
+    plane offset into the concatenated ``E * grid_n`` block-columns is
+    implicit in the leading axis — so ``expert_matmul`` issues a single
+    fused kernel call (``kernels.ops.bsr_planes_matmul``) instead of a
+    python loop + stack over planes.  Pruning every tile of a plane
+    removes the whole expert — the paper's coarse structure; a dead
+    plane contributes only `pl.when`-skipped padding slots.
     """
 
-    planes: Tuple[BSRWeight, ...]
+    indices: jnp.ndarray            # (E, grid_n, max_nnz) int32, -1 padded
+    blocks: jnp.ndarray             # (E, grid_n, max_nnz, bk, bn)
     shape: Tuple[int, ...]          # full dense shape, leading dims included
+    blocking: BlockingSpec          # effective (clamped) tile shape
+
+    @classmethod
+    def from_planes(cls, planes: Tuple[BSRWeight, ...],
+                    shape: Tuple[int, ...]) -> "BSRPlanes":
+        """Concatenate independent per-plane BSRWeights (same (K, N) and
+        blocking) into the fused layout, padding slots to the max."""
+        max_nnz = max(p.max_nnz for p in planes)
+        idx, blk = [], []
+        for p in planes:
+            pad = max_nnz - p.max_nnz
+            idx.append(jnp.pad(p.indices, ((0, 0), (0, pad)),
+                               constant_values=-1))
+            blk.append(jnp.pad(p.blocks, ((0, 0), (0, pad), (0, 0), (0, 0))))
+        return cls(
+            indices=jnp.stack(idx),
+            blocks=jnp.stack(blk),
+            shape=tuple(int(s) for s in shape),
+            blocking=planes[0].blocking,
+        )
+
+    @property
+    def num_planes(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def grid_k(self) -> int:
+        return -(-self.shape[-2] // self.blocking.bk)
+
+    @property
+    def grid_n(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def max_nnz(self) -> int:
+        return self.indices.shape[2]
+
+    @property
+    def planes(self) -> Tuple[BSRWeight, ...]:
+        """Per-plane BSRWeight views into the fused arrays (oracles/tests)."""
+        kn = (int(self.shape[-2]), int(self.shape[-1]))
+        return tuple(
+            BSRWeight(indices=self.indices[e], blocks=self.blocks[e],
+                      shape=kn, blocking=self.blocking)
+            for e in range(self.num_planes)
+        )
 
     def density(self) -> float:
-        nnz = sum(p.nnz_blocks for p in self.planes)
-        total = sum(p.grid_k * p.grid_n for p in self.planes)
-        return nnz / max(total, 1)
+        nnz = int(jnp.sum(self.indices >= 0))
+        return nnz / max(self.num_planes * self.grid_k * self.grid_n, 1)
 
     def tree_flatten(self):
-        return tuple(self.planes), (self.shape,)
+        return (self.indices, self.blocks), (self.shape, self.blocking)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(planes=tuple(children), shape=aux[0])
+        indices, blocks = children
+        shape, blocking = aux
+        return cls(indices=indices, blocks=blocks, shape=shape,
+                   blocking=blocking)
 
 
 jax.tree_util.register_pytree_node(
@@ -119,8 +172,8 @@ def pack_params(
             k, n = w.shape[-2], w.shape[-1]
             w3 = w.reshape(info.planes, k, n)
             m3 = None if m is None else m.reshape(info.planes, k, n)
-            leaf = BSRPlanes(
-                planes=tuple(
+            leaf = BSRPlanes.from_planes(
+                tuple(
                     pack_bsr(w3[p], info.blocking,
                              mask=None if m3 is None else m3[p])
                     for p in range(info.planes)
@@ -165,8 +218,8 @@ def sparsity_summary(packed: Mapping[str, Any]) -> Dict[str, Any]:
             nnz += leaf.nnz_blocks
             total += leaf.grid_k * leaf.grid_n
         else:
-            nnz += sum(p.nnz_blocks for p in leaf.planes)
-            total += sum(p.grid_k * p.grid_n for p in leaf.planes)
+            nnz += int(jnp.sum(leaf.indices >= 0))
+            total += leaf.num_planes * leaf.grid_k * leaf.grid_n
     return {
         "per_path": per_path,
         "nnz_blocks": int(nnz),

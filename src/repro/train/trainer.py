@@ -133,8 +133,11 @@ class Trainer:
                 self.eval_fn(self.state, step + 1)
 
         final_step = step + (0 if self._preempted else 1)
-        self.ckpt.save(final_step, self.state, blocking=True)
+        # drain any in-flight async save of this step before the final
+        # blocking one — otherwise both writers race on the same .tmp dir
         self.ckpt.wait()
+        if self.ckpt.latest_step() != final_step:
+            self.ckpt.save(final_step, self.state, blocking=True)
         return {
             "final_step": final_step,
             "preempted": self._preempted,

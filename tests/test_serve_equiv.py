@@ -7,7 +7,14 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, make_smoke
-from repro.models import init_caches, init_params, lm_decode, lm_forward
+from repro.models import (
+    init_caches,
+    init_params,
+    lm_decode,
+    lm_forward,
+    lm_prefill,
+)
+from repro.models.transformer import encode_kv_caches, encoder_forward
 from repro.models.attention import chunked_causal_attention, full_attention
 from repro.models.mamba import mamba_apply, mamba_decode, mamba_init, init_mamba_cache
 from repro.models.xlstm import (
@@ -45,6 +52,38 @@ def test_prefill_vs_incremental(arch):
         np.asarray(inc, np.float32), np.asarray(full_logits, np.float32),
         atol=2e-2, rtol=2e-2,
     )
+
+
+def test_whisper_decode_and_prefill_match_forward():
+    """Encoder-decoder: the serve paths (per-token decode AND batched
+    lm_prefill) reproduce lm_forward — pins use_rope=False handling and
+    the cross-attention raw-residual dataflow."""
+    cfg = make_smoke(get_config("whisper-tiny"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 9
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    frames = jax.random.normal(jax.random.PRNGKey(2),
+                               (b, cfg.enc_frames, cfg.d_model))
+    full_logits, _ = lm_forward(params, {"tokens": tokens, "frames": frames}, cfg)
+    enc = encoder_forward(params, frames, cfg)
+
+    caches = init_caches(cfg, b, s, jnp.float32)
+    caches = encode_kv_caches(params, enc, cfg, caches)
+    inc = []
+    for t in range(s):
+        logits, caches = lm_decode(params, caches, {"tokens": tokens[:, t:t + 1]},
+                                   jnp.asarray(t, jnp.int32), cfg)
+        inc.append(logits[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(inc, axis=1), np.float32),
+        np.asarray(full_logits, np.float32), atol=2e-2, rtol=2e-2)
+
+    caches_p = init_caches(cfg, b, s, jnp.float32)
+    caches_p = encode_kv_caches(params, enc, cfg, caches_p)
+    pf, _ = lm_prefill(params, caches_p, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(
+        np.asarray(pf, np.float32), np.asarray(full_logits, np.float32),
+        atol=2e-2, rtol=2e-2)
 
 
 def test_chunked_attention_matches_full():

@@ -15,7 +15,14 @@ from repro.configs import get_config, make_smoke
 from repro.core import BlockingSpec, apply_masks, build_structures, masks_from_knapsack
 from repro.core.masks import _get_path
 from repro.core.packing import BSRWeight
-from repro.models import init_caches, init_params, lm_decode, lm_forward
+from repro.models import (
+    init_caches,
+    init_params,
+    lm_decode,
+    lm_forward,
+    lm_generate,
+    lm_prefill,
+)
 from repro.sparse import (
     BSRPlanes,
     knapsack_prune,
@@ -166,6 +173,116 @@ def test_unpack_is_masked_dense_oracle():
             np.asarray(_get_path(recon, info.path)),
             np.asarray(_get_path(masked, info.path)),
             atol=1e-6, err_msg=info.path)
+
+
+# ---------------------------------------------------------------------------
+# Serving hot path: batched prefill + single-scan decode (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _greedy_loop(cfg, params, tokens, gen):
+    """The per-token reference loop the hot path replaced: prefill by
+    feeding prompt tokens through lm_decode, then greedy decode with a
+    host round-trip per token."""
+    b, plen = tokens.shape
+    caches = init_caches(cfg, b, plen + gen, jnp.float32)
+    logits = None
+    for t in range(plen):
+        logits, caches = lm_decode(params, caches, {"tokens": tokens[:, t:t + 1]},
+                                   jnp.asarray(t, jnp.int32), cfg)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = []
+    for i in range(gen):
+        out.append(np.asarray(tok)[:, 0])
+        logits, caches = lm_decode(params, caches, {"tokens": tok},
+                                   jnp.asarray(plen + i, jnp.int32), cfg)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return np.stack(out, axis=1)
+
+
+def _hot_path(cfg, params, tokens, gen):
+    """Batched lm_prefill + one lm_generate scan (two jitted calls)."""
+    b, plen = tokens.shape
+    caches = init_caches(cfg, b, plen + gen, jnp.float32)
+    prefill = jax.jit(lambda p, c, t: lm_prefill(p, c, {"tokens": t}, cfg))
+    generate = jax.jit(lambda p, c, t, l: lm_generate(p, c, t, l, gen, cfg))
+    logits, caches = prefill(params, caches, tokens)
+    first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    toks, _ = generate(params, caches, first, jnp.asarray(plen, jnp.int32))
+    return np.asarray(toks), logits
+
+
+@pytest.mark.parametrize("arch,prune_kw", [
+    ("qwen1.5-0.5b", {}),
+    ("granite-moe-1b-a400m", {"include": ("moe", "mlp", "attn")}),
+    ("jamba-v0.1-52b", {}),          # mamba_prefill SSM/conv state
+    # mlstm/slstm prefill carries (xlstm has no mlp/attn paths to prune)
+    ("xlstm-350m", {"include": ("mlstm", "slstm")}),
+])
+def test_hot_path_token_identical(arch, prune_kw):
+    """Prefill+scan-decode reproduces the per-token loop token-for-token,
+    on masked-dense AND packed params (transformer, MoE, SSM, xLSTM)."""
+    cfg, masked, packed = _pruned_pair(arch, **prune_kw)
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (2, 10), 0, cfg.vocab)
+    gen = 6
+    for name, params in (("dense", masked), ("packed", packed)):
+        want = _greedy_loop(cfg, params, tokens, gen)
+        got, _ = _hot_path(cfg, params, tokens, gen)
+        np.testing.assert_array_equal(got, want, err_msg=f"{arch}/{name}")
+
+
+def test_hot_path_swa_ring_token_identical():
+    """SWA ring cache (prompt longer than the window-sized cache):
+    attention_prefill's last-alloc-tokens-at-t%alloc writes must match
+    the per-token decode's ring placement."""
+    cfg = make_smoke(get_config("mixtral-8x7b"), window=8, capacity_factor=8.0)
+    params = init_params(jax.random.PRNGKey(10), cfg)
+    b, plen, gen = 2, 14, 5
+    tokens = jax.random.randint(jax.random.PRNGKey(11), (b, plen), 0, cfg.vocab)
+
+    caches = init_caches(cfg, b, cfg.window, jnp.float32)  # alloc = window
+    logits = None
+    for t in range(plen):
+        logits, caches = lm_decode(params, caches, {"tokens": tokens[:, t:t + 1]},
+                                   jnp.asarray(t, jnp.int32), cfg)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    want = []
+    for i in range(gen):
+        want.append(np.asarray(tok)[:, 0])
+        logits, caches = lm_decode(params, caches, {"tokens": tok},
+                                   jnp.asarray(plen + i, jnp.int32), cfg)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+    caches_p = init_caches(cfg, b, cfg.window, jnp.float32)
+    pl, caches_p = lm_prefill(params, caches_p, {"tokens": tokens}, cfg)
+    first = jnp.argmax(pl[:, -1], -1)[:, None].astype(jnp.int32)
+    got, _ = lm_generate(params, caches_p, first,
+                         jnp.asarray(plen, jnp.int32), gen, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.stack(want, axis=1))
+
+
+def test_prefill_logits_match_forward():
+    """lm_prefill is lm_forward + cache fill: identical logits, dense and
+    packed."""
+    cfg, masked, packed = _pruned_pair("qwen1.5-0.5b")
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (2, 9), 0, cfg.vocab)
+    for params in (masked, packed):
+        want, _ = lm_forward(params, {"tokens": tokens}, cfg)
+        caches = init_caches(cfg, 2, 12, jnp.float32)
+        got, _ = lm_prefill(params, caches, {"tokens": tokens}, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-3, rtol=1e-4)
+
+
+def test_hot_path_packed_equals_dense_tokens():
+    """Packed and masked-dense params greedy-decode the same tokens
+    through the new path (the end-to-end zero-skipping guarantee)."""
+    cfg, masked, packed = _pruned_pair("qwen1.5-0.5b")
+    tokens = jax.random.randint(jax.random.PRNGKey(9), (2, 8), 0, cfg.vocab)
+    got_d, logits_d = _hot_path(cfg, masked, tokens, 5)
+    got_p, logits_p = _hot_path(cfg, packed, tokens, 5)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_array_equal(got_p, got_d)
 
 
 def test_knapsack_prune_respects_budget():

@@ -135,20 +135,21 @@ def test_trainer_straggler_detection():
 def test_compression_error_feedback_converges():
     """Accumulated int8 psum with error feedback is unbiased over steps."""
     import os
+    from repro.distributed.sharding import make_mesh, shard_map, use_mesh
     from repro.optim.compression import compressed_psum
 
-    # single-device: emulate via jax.shard_map on a 1-axis mesh of size 1
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # single-device: emulate via shard_map on a 1-axis mesh of size 1
+    # (make_mesh/use_mesh/shard_map gate the post-0.4.x jax APIs)
+    mesh = make_mesh((1,), ("pod",))
     from jax.sharding import PartitionSpec as P
 
     g = jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))
     err = jnp.zeros_like(g)
     total = jnp.zeros_like(g)
-    with jax.set_mesh(mesh):
-        fn = jax.shard_map(
+    with use_mesh(mesh):
+        fn = shard_map(
             lambda a, b: compressed_psum(a, b, "pod"),
-            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False)
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check=False)
         for _ in range(50):
             out, err = fn(g, err)
             total = total + out
