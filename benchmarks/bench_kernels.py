@@ -45,7 +45,7 @@ def main(quick: bool = False) -> List[str]:
         x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
 
         pl_fn = jax.jit(lambda xx: bsr_matmul_pallas(
-            xx, bsr.indices, bsr.blocks, n=n, bm=128, interpret=True))
+            xx, bsr, bm=128, interpret=True))
         ref_fn = jax.jit(lambda xx: ref.bsr_matmul_ref(xx, bsr))
         t_pl = _time(pl_fn, x)
         t_ref = _time(ref_fn, x)

@@ -1,16 +1,20 @@
 """Dense vs BSR-packed serving benchmark through the compiled hot path.
 
-Times the two jitted serving calls (DESIGN.md §7) — batched ``lm_prefill``
-and the single-scan ``lm_generate`` greedy loop — on a smoke LM, dense and
-knapsack-pruned+packed, and writes ``BENCH_serving.json``::
+Times the two jitted serving calls (DESIGN.md §7/§8) — batched
+``lm_prefill`` and the single-scan ``lm_generate`` greedy loop —
+*separately* for dense and knapsack-pruned+packed params, and writes
+``BENCH_serving.json``::
 
     {"config": {...}, "dense_tok_s": ..., "packed_tok_s": ...,
-     "prefill_ms": ..., ...}
+     "dense_prefill_ms": ..., "packed_prefill_ms": ...,
+     "prefill_speedup": ..., "decode_speedup": ...}
 
 so the serving-perf trajectory is tracked from PR 2 on.  The packed
-numbers exercise the zero-skipping kernels end-to-end (ref path on CPU,
-compiled Pallas on TPU); at the default 75% structure sparsity packed
-decode should beat dense on both backends — work scales with density.
+numbers exercise the zero-skipping kernels end-to-end (flat-store ref
+path on CPU, compiled Pallas on TPU); at the default 75% structure
+sparsity packed must beat dense on BOTH halves — prefill (bm-tiled
+GEMMs) and decode (single-row GEMMs) — work scales with density.
+``scripts/check.sh`` gates on both speedups.
 
 ``python benchmarks/bench_serving.py [--quick] [--out BENCH_serving.json]``
 """
@@ -60,14 +64,19 @@ def bench_serving(
     generate = jax.jit(lambda p, c, t, l: lm_generate(p, c, t, l, gen, cfg))
 
     def run(p) -> Dict[str, float]:
+        """Times prefill and decode separately (each over ``reps`` runs)
+        — the two halves of the serving hot path scale with sparsity
+        differently (bm-tiled GEMMs vs single-row GEMMs), so a combined
+        number would hide a regression in either."""
         caches = init_caches(cfg, batch, prompt_len + gen, jnp.float32)
         # warm both calls (compile + first-run constants)
         logits, c = prefill(p, caches, prompt)
         jax.block_until_ready(logits)
         t0 = time.time()
-        logits, c = prefill(p, caches, prompt)
+        for _ in range(reps):
+            logits, c = prefill(p, caches, prompt)
         jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
+        t_prefill = max((time.time() - t0) / reps, 1e-9)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         plen = jnp.asarray(prompt_len, jnp.int32)
         toks, _ = generate(p, c, tok, plen)
@@ -95,6 +104,7 @@ def bench_serving(
         "prefill_ms": sparse["prefill_ms"],
         "dense_prefill_ms": dense["prefill_ms"],
         "packed_prefill_ms": sparse["prefill_ms"],
+        "prefill_speedup": dense["prefill_ms"] / max(sparse["prefill_ms"], 1e-9),
         "decode_speedup": sparse["tok_s"] / max(dense["tok_s"], 1e-9),
     }
 
@@ -112,7 +122,7 @@ def main(quick: bool = False):
         f"serving_prefill_dense,{r['dense_prefill_ms'] * 1e3:.0f},"
         f"b{c['batch']}xS{c['prompt_len']} d{c['d_model']}",
         f"serving_prefill_packed,{r['packed_prefill_ms'] * 1e3:.0f},"
-        f"density={c['density']:.2f}",
+        f"density={c['density']:.2f} speedup={r['prefill_speedup']:.2f}x",
         f"serving_decode,{0:.0f},dense={r['dense_tok_s']:.0f}tok/s "
         f"packed={r['packed_tok_s']:.0f}tok/s "
         f"speedup={r['decode_speedup']:.2f}x",
@@ -151,7 +161,8 @@ def cli() -> int:
           f"density={c['density']:.2f}]")
     print(f"  dense : prefill {result['dense_prefill_ms']:7.1f}ms  "
           f"decode {result['dense_tok_s']:8.1f} tok/s")
-    print(f"  packed: prefill {result['packed_prefill_ms']:7.1f}ms  "
+    print(f"  packed: prefill {result['packed_prefill_ms']:7.1f}ms "
+          f"({result['prefill_speedup']:.2f}x)  "
           f"decode {result['packed_tok_s']:8.1f} tok/s "
           f"({result['decode_speedup']:.2f}x)")
     print(f"  -> {args.out}")

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Smoke gate: deterministic test subset + the pruned-serving entrypoints
-# + the serving benchmark (writes BENCH_serving.json).
+# + the serving benchmark (writes BENCH_serving.json) + perf gates.
 #
 # The full tier-1 command is `PYTHONPATH=src python -m pytest -x -q`;
 # since PR 2 (jax-version gates in distributed/sharding.py) it should be
@@ -19,14 +19,40 @@ python -m pytest -q \
     tests/test_pruner.py \
     tests/test_system.py
 
+# the bm-tiled kernel grid must stay covered in BOTH serving shapes:
+# decode-shaped (M=1) and prefill-shaped (M=64, >1 row tile) interpret-mode
+# runs of the real Pallas kernel body.  pytest exits 5 ("no tests
+# collected") if these ever get renamed away — the gate fails loudly
+# instead of the tiling branch silently going dead.
+python -m pytest -q tests/test_kernels.py -k "interpret_grid_epilogue"
+
 python examples/serve_pruned.py
 
 python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
     --pruned 0.5 --prompt-len 4 --gen 8
 
+# sampled + EOS-early-exit decode through the same hot path
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+    --pruned 0.5 --prompt-len 4 --gen 8 \
+    --temperature 0.8 --top-k 16 --top-p 0.95 --eos-id 2
+
 # serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
 # (full default size on purpose — ~10s on CPU, and the committed numbers
 # should show the real packed-over-dense margin, which --quick thins out)
 python benchmarks/bench_serving.py
+
+# perf gates on the numbers just measured: packed decode must stay well
+# ahead of dense, and packed prefill must not regress past 2x dense (it
+# should BEAT dense — see BENCH_serving.json for the committed margin)
+python - <<'PY'
+import json
+r = json.load(open("BENCH_serving.json"))
+ds = r["decode_speedup"]
+dp, pp = r["dense_prefill_ms"], r["packed_prefill_ms"]
+assert ds >= 1.5, f"decode_speedup regressed: {ds:.2f}x < 1.5x"
+assert pp <= 2.0 * dp, \
+    f"packed prefill regressed >2x vs dense: {pp:.1f}ms vs {dp:.1f}ms"
+print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x OK")
+PY
 
 echo "check.sh: OK"

@@ -6,14 +6,30 @@ into a block-compressed (BSR-like) layout and run the Pallas kernel in
 ``kernels/block_sparse_matmul.py``, which iterates only over surviving
 tiles (scalar-prefetched indices choose the HBM->VMEM DMAs).
 
-Layout: for each block-column j (output tile), the K-block indices of its
-surviving tiles, padded to the column max with -1:
+Two coordinated views of the same live-tile set (DESIGN.md §8):
 
-    indices: (grid_n, max_nnz) int32   (-1 = padding slot)
-    blocks:  (grid_n, max_nnz, bk, bn) weight dtype  (zeros in padding)
+* **flat store** — the single copy of the weights, live tiles only,
+  column-major over (block-col, slot):
 
-Column-major-by-output grouping matches the matmul loop: an output tile
-accumulates over its own column's surviving tiles only.
+      blocks:    (nnz, bk, bn)  weight dtype (>=1 slot, zeros if empty)
+      flat_rows: (nnz,) int32   K-block index per live tile
+      flat_cols: (nnz,) int32   N-block index per live tile (sorted)
+
+  The ref kernel contracts this directly — ONE batched (nnz, M, bk) @
+  (nnz, bk, bn) GEMM + a sorted segment-sum over output block-columns —
+  so work scales with the *true* live count, not ``grid_n * max_nnz``.
+
+* **per-column map** — the Pallas grid's view, padded to the column max:
+
+      indices: (grid_n, max_nnz) int32  K-block per slot, -1 = padding
+      slots:   (grid_n, max_nnz) int32  index into the flat store (0 pad)
+
+  Output tile (i, j) accumulates over its own column's slots; padding
+  slots are `pl.when`-skipped (their flat-store fetch is a benign
+  redundant DMA bounded by the per-column padding).
+
+Column-major-by-output grouping matches the matmul loop either way: no
+scatter is ever needed because BSR columns partition the output.
 """
 from __future__ import annotations
 
@@ -26,7 +42,7 @@ import numpy as np
 
 from .structures import BlockingSpec
 
-__all__ = ["BSRWeight", "pack_bsr", "bsr_to_dense"]
+__all__ = ["BSRWeight", "BSRPlanes", "pack_bsr", "bsr_to_dense"]
 
 
 @dataclasses.dataclass
@@ -34,9 +50,13 @@ class BSRWeight:
     """Block-sparse weight for a (K, N) matmul, tiles of (bk, bn)."""
 
     indices: jnp.ndarray      # (grid_n, max_nnz) int32, -1 padded
-    blocks: jnp.ndarray       # (grid_n, max_nnz, bk, bn)
+    slots: jnp.ndarray        # (grid_n, max_nnz) int32 into blocks, 0 padded
+    blocks: jnp.ndarray       # (nnz, bk, bn) flat store, column-major
+    flat_rows: jnp.ndarray    # (nnz,) int32 K-block per live tile
+    flat_cols: jnp.ndarray    # (nnz,) int32 N-block per live tile, sorted
     shape: Tuple[int, int]    # dense (K, N)
     blocking: BlockingSpec
+    nnz_blocks: int           # true live count (blocks may pad to >= 1)
 
     @property
     def grid_k(self) -> int:
@@ -50,25 +70,137 @@ class BSRWeight:
     def max_nnz(self) -> int:
         return self.indices.shape[1]
 
-    @property
-    def nnz_blocks(self) -> int:
-        return int(jnp.sum(self.indices >= 0))
-
     def density(self) -> float:
         return self.nnz_blocks / max(self.grid_k * self.grid_n, 1)
 
     def tree_flatten(self):
-        return (self.indices, self.blocks), (self.shape, self.blocking)
+        children = (self.indices, self.slots, self.blocks,
+                    self.flat_rows, self.flat_cols)
+        return children, (self.shape, self.blocking, self.nnz_blocks)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        indices, blocks = children
-        shape, blocking = aux
-        return cls(indices=indices, blocks=blocks, shape=shape, blocking=blocking)
+        indices, slots, blocks, flat_rows, flat_cols = children
+        shape, blocking, nnz_blocks = aux
+        return cls(indices=indices, slots=slots, blocks=blocks,
+                   flat_rows=flat_rows, flat_cols=flat_cols,
+                   shape=shape, blocking=blocking, nnz_blocks=nnz_blocks)
 
 
 jax.tree_util.register_pytree_node(
     BSRWeight, BSRWeight.tree_flatten, BSRWeight.tree_unflatten
+)
+
+
+@dataclasses.dataclass
+class BSRPlanes:
+    """Flattened per-plane BSR stack for a >2-D weight (MoE (E, D, F)).
+
+    The per-plane ``BSRWeight`` views are concatenated into ONE rectangular
+    stack: the per-column slot dim pads to the stack-wide ``max_nnz`` and
+    the flat store pads to the largest plane's live count, so
+    ``expert_matmul`` issues a single fused kernel call
+    (``kernels.ops.bsr_planes_matmul``) instead of a python loop + stack
+    over planes.  Pruning every tile of a plane removes the whole expert —
+    the paper's coarse structure; a dead plane contributes only
+    `pl.when`-skipped padding slots (zero blocks in the flat store).
+    """
+
+    indices: jnp.ndarray            # (E, grid_n, max_nnz) int32, -1 padded
+    slots: jnp.ndarray              # (E, grid_n, max_nnz) int32, 0 padded
+    blocks: jnp.ndarray             # (E, nnz_pad, bk, bn) flat stores
+    flat_rows: jnp.ndarray          # (E, nnz_pad) int32, 0 padded
+    flat_cols: jnp.ndarray          # (E, nnz_pad) int32 sorted per plane
+                                    # (grid_n-1 padded, keeps monotonic)
+    shape: Tuple[int, ...]          # full dense shape, leading dims included
+    blocking: BlockingSpec          # effective (clamped) tile shape
+    plane_nnz: Tuple[int, ...]      # true live count per plane
+
+    @classmethod
+    def from_planes(cls, planes: Tuple[BSRWeight, ...],
+                    shape: Tuple[int, ...]) -> "BSRPlanes":
+        """Concatenate independent per-plane BSRWeights (same (K, N) and
+        blocking) into the fused layout, padding both the per-column slot
+        dim and the flat store to the stack-wide max."""
+        max_nnz = max(p.max_nnz for p in planes)
+        nnz_pad = max(p.blocks.shape[0] for p in planes)
+        gn = planes[0].grid_n
+        idx, slt, blk, fr, fc = [], [], [], [], []
+        for p in planes:
+            spad = max_nnz - p.max_nnz
+            zpad = nnz_pad - p.blocks.shape[0]
+            idx.append(jnp.pad(p.indices, ((0, 0), (0, spad)),
+                               constant_values=-1))
+            slt.append(jnp.pad(p.slots, ((0, 0), (0, spad))))
+            blk.append(jnp.pad(p.blocks, ((0, zpad), (0, 0), (0, 0))))
+            fr.append(jnp.pad(p.flat_rows, (0, zpad)))
+            # pad flat_cols with the LAST column id, not 0: the ref's
+            # sorted segment-sum requires the per-plane ids to stay
+            # monotonic through the padding (zero blocks contribute zero
+            # wherever they point, so any valid column works)
+            fc.append(jnp.pad(p.flat_cols, (0, zpad),
+                              constant_values=gn - 1))
+        return cls(
+            indices=jnp.stack(idx), slots=jnp.stack(slt),
+            blocks=jnp.stack(blk), flat_rows=jnp.stack(fr),
+            flat_cols=jnp.stack(fc),
+            shape=tuple(int(s) for s in shape),
+            blocking=planes[0].blocking,
+            plane_nnz=tuple(p.nnz_blocks for p in planes),
+        )
+
+    @property
+    def num_planes(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def grid_k(self) -> int:
+        return -(-self.shape[-2] // self.blocking.bk)
+
+    @property
+    def grid_n(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def max_nnz(self) -> int:
+        return self.indices.shape[2]
+
+    @property
+    def nnz_blocks(self) -> int:
+        return sum(self.plane_nnz)
+
+    @property
+    def planes(self) -> Tuple[BSRWeight, ...]:
+        """Per-plane BSRWeight views into the fused arrays (oracles/tests)."""
+        kn = (int(self.shape[-2]), int(self.shape[-1]))
+        return tuple(
+            BSRWeight(indices=self.indices[e], slots=self.slots[e],
+                      blocks=self.blocks[e], flat_rows=self.flat_rows[e],
+                      flat_cols=self.flat_cols[e], shape=kn,
+                      blocking=self.blocking, nnz_blocks=self.plane_nnz[e])
+            for e in range(self.num_planes)
+        )
+
+    def density(self) -> float:
+        return self.nnz_blocks / max(
+            self.num_planes * self.grid_k * self.grid_n, 1)
+
+    def tree_flatten(self):
+        children = (self.indices, self.slots, self.blocks,
+                    self.flat_rows, self.flat_cols)
+        return children, (self.shape, self.blocking, self.plane_nnz)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indices, slots, blocks, flat_rows, flat_cols = children
+        shape, blocking, plane_nnz = aux
+        return cls(indices=indices, slots=slots, blocks=blocks,
+                   flat_rows=flat_rows, flat_cols=flat_cols, shape=shape,
+                   blocking=blocking, plane_nnz=plane_nnz)
+
+
+jax.tree_util.register_pytree_node(
+    BSRPlanes, BSRPlanes.tree_flatten, BSRPlanes.tree_unflatten
 )
 
 
@@ -94,19 +226,33 @@ def pack_bsr(
     alive = np.abs(tiles).sum(axis=(2, 3)) > 0                # (gk, gn)
 
     max_nnz = max(int(alive.sum(axis=0).max(initial=0)), min_slots)
+    nnz = int(alive.sum())
+    nnz_pad = max(nnz, 1)
     indices = np.full((gn, max_nnz), -1, dtype=np.int32)
-    blocks = np.zeros((gn, max_nnz, bk, bn), dtype=w.dtype)
+    slots = np.zeros((gn, max_nnz), dtype=np.int32)
+    blocks = np.zeros((nnz_pad, bk, bn), dtype=w.dtype)
+    flat_rows = np.zeros((nnz_pad,), dtype=np.int32)
+    flat_cols = np.zeros((nnz_pad,), dtype=np.int32)
+    z = 0
     for j in range(gn):
         rows = np.flatnonzero(alive[:, j])
         indices[j, : rows.size] = rows
-        blocks[j, : rows.size] = tiles[rows, j]
+        slots[j, : rows.size] = np.arange(z, z + rows.size)
+        blocks[z : z + rows.size] = tiles[rows, j]
+        flat_rows[z : z + rows.size] = rows
+        flat_cols[z : z + rows.size] = j
+        z += rows.size
 
     eff = BlockingSpec(bk=bk, bn=bn, consecutive=blocking.consecutive)
     return BSRWeight(
         indices=jnp.asarray(indices),
+        slots=jnp.asarray(slots),
         blocks=jnp.asarray(blocks),
+        flat_rows=jnp.asarray(flat_rows),
+        flat_cols=jnp.asarray(flat_cols),
         shape=(k, n),
         blocking=eff,
+        nnz_blocks=nnz,
     )
 
 
@@ -115,12 +261,8 @@ def bsr_to_dense(bsr: BSRWeight) -> jnp.ndarray:
     bk, bn = bsr.blocking.bk, bsr.blocking.bn
     gk, gn = bsr.grid_k, bsr.grid_n
     dense = jnp.zeros((gk * bk, gn * bn), dtype=bsr.blocks.dtype)
-    for j in range(gn):
-        for s in range(bsr.max_nnz):
-            i = bsr.indices[j, s]
-            safe = jnp.maximum(i, 0)
-            cur = jax.lax.dynamic_slice(dense, (safe * bk, j * bn), (bk, bn))
-            new = jnp.where(i >= 0, bsr.blocks[j, s], cur)
-            dense = jax.lax.dynamic_update_slice(
-                dense, new.astype(dense.dtype), (safe * bk, j * bn))
+    for z in range(bsr.nnz_blocks):
+        dense = jax.lax.dynamic_update_slice(
+            dense, bsr.blocks[z].astype(dense.dtype),
+            (bsr.flat_rows[z] * bk, bsr.flat_cols[z] * bn))
     return dense[: bsr.shape[0], : bsr.shape[1]]

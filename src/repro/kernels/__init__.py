@@ -6,6 +6,10 @@
 Each kernel ships with a jit wrapper (ops.py) and a pure-jnp oracle
 (ref.py); tests sweep shapes/dtypes with assert_allclose in interpret mode.
 """
+from .epilogue import Epilogue, apply_epilogue, make_epilogue
 from .ops import bsr_matmul, bsr_planes_matmul, structure_norms
 
-__all__ = ["bsr_matmul", "bsr_planes_matmul", "structure_norms"]
+__all__ = [
+    "Epilogue", "apply_epilogue", "make_epilogue",
+    "bsr_matmul", "bsr_planes_matmul", "structure_norms",
+]

@@ -1,0 +1,95 @@
+"""Epilogue spec for the fused BSR matmul kernels (DESIGN.md §8).
+
+A matmul epilogue is everything the layer applies to the accumulator
+before the next GEMM: bias add, activation, the SwiGLU gate multiply,
+and the residual add.  Materializing those as separate ops costs a full
+(M, N) round-trip each — on the prefill path that is three extra
+(B, T, d_ff) tensors per MLP.  ``Epilogue`` names the fused tail once so
+every execution path (Pallas kernel, interpret mode, jnp ref, dense
+einsum fallback) applies the identical fp32 math:
+
+    y = accum                      # fp32 out of the MXU / einsum
+    y = y + bias                   # (N,) broadcast
+    y = act(y)                     # jax.nn.<activation>
+    y = y * multiplier             # SwiGLU: y is the gate, mult the up
+    y = y + residual               # skip connection
+    return y.astype(out_dtype)
+
+The array operands ride the pytree (so the spec jits like any other
+argument); the activation name is static aux data — presence/absence of
+an operand changes the treedef and therefore retraces, exactly like a
+changed kernel configuration should.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Epilogue", "apply_epilogue", "make_epilogue"]
+
+
+@dataclasses.dataclass
+class Epilogue:
+    """Fused matmul tail: ``act(y + bias) * multiplier + residual``."""
+
+    bias: Optional[jnp.ndarray] = None          # (N,)
+    multiplier: Optional[jnp.ndarray] = None    # (..., N) — SwiGLU "up"
+    residual: Optional[jnp.ndarray] = None      # (..., N) skip input
+    activation: Optional[str] = None            # jax.nn name (static)
+
+    def tree_flatten(self):
+        return (self.bias, self.multiplier, self.residual), (self.activation,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bias, multiplier, residual = children
+        return cls(bias=bias, multiplier=multiplier, residual=residual,
+                   activation=aux[0])
+
+    def map_operands(self, fn) -> "Epilogue":
+        """New spec with ``fn`` applied to the (M, N)-shaped operands —
+        used by wrappers that reshape/transpose x around the kernel."""
+        return Epilogue(
+            bias=self.bias,
+            multiplier=None if self.multiplier is None else fn(self.multiplier),
+            residual=None if self.residual is None else fn(self.residual),
+            activation=self.activation,
+        )
+
+
+jax.tree_util.register_pytree_node(
+    Epilogue, Epilogue.tree_flatten, Epilogue.tree_unflatten
+)
+
+
+def make_epilogue(
+    bias=None, activation: Optional[str] = None, multiplier=None, residual=None
+) -> Optional[Epilogue]:
+    """Epilogue or None when there is nothing to fuse (keeps the treedef
+    of plain matmul calls unchanged)."""
+    if bias is None and activation is None and multiplier is None \
+            and residual is None:
+        return None
+    return Epilogue(bias=bias, multiplier=multiplier, residual=residual,
+                    activation=activation)
+
+
+def apply_epilogue(y: jnp.ndarray, epi: Optional[Epilogue]) -> jnp.ndarray:
+    """The epilogue contract on a plain array (ref kernels and the dense
+    einsum fallback) — fp32 in, fp32 out, same op order as the kernel."""
+    if epi is None:
+        return y
+    if epi.bias is not None:
+        y = y + epi.bias.astype(y.dtype)
+    if epi.activation is not None:
+        y = getattr(jax.nn, epi.activation)(y)
+    if epi.multiplier is not None:
+        y = y * epi.multiplier
+    if epi.residual is not None:
+        # natural promotion: a bf16 accumulator must not downcast the
+        # (possibly wider) residual stream
+        y = y + epi.residual
+    return y

@@ -7,23 +7,34 @@ Mode dispatch (``mode=``):
 * ``interpret`` — the Pallas kernel under the interpreter, any backend —
   this is how CI exercises the real kernel body on CPU hosts
 
-The ref path is itself zero-skipping (it contracts live blocks only, no
-densify — see kernels/ref.py), so CPU serving gets the same
-work-scales-with-density contract as the TPU kernel.
+The ref path is itself zero-skipping (it contracts the flat live-tile
+store only, no densify — see kernels/ref.py), so CPU serving gets the
+same work-scales-with-density contract as the TPU kernel.
+
+Both wrappers accept a fused ``Epilogue`` (kernels/epilogue.py): bias,
+activation, SwiGLU gate multiply and residual are applied to the fp32
+accumulator inside the kernel (or on the ref accumulator before the
+final cast) — identical math on every path, no (M, N) intermediate
+round-trips.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import BSRWeight
+from repro.core.packing import BSRPlanes, BSRWeight
 from .block_sparse_matmul import bsr_matmul_pallas, bsr_planes_matmul_pallas
+from .epilogue import Epilogue, apply_epilogue, make_epilogue
 from .structure_norms import structure_norms_pallas
 from . import ref as _ref
 
-__all__ = ["bsr_matmul", "bsr_planes_matmul", "structure_norms", "on_tpu"]
+__all__ = [
+    "Epilogue", "apply_epilogue", "make_epilogue",
+    "bsr_matmul", "bsr_planes_matmul", "structure_norms", "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -43,44 +54,51 @@ def bsr_matmul(
     *,
     bm: int = 128,
     mode: str = "auto",          # auto | pallas | interpret | ref
+    epilogue: Optional[Epilogue] = None,
 ) -> jnp.ndarray:
-    """y = x @ W_bsr for x (..., K); skips pruned tiles on every path."""
+    """y = epilogue(x @ W_bsr) for x (..., K); skips pruned tiles on
+    every path.  Epilogue operands broadcast over the leading dims of x
+    (i.e. multiplier/residual are shaped (..., N) like the output)."""
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
+    epi = None if epilogue is None else epilogue.map_operands(
+        lambda a: a.reshape(-1, a.shape[-1]))
     if _use_ref(mode):
-        y = _ref.bsr_matmul_ref(x2, bsr)
+        y = _ref.bsr_matmul_ref(x2, bsr, epilogue=epi)
     else:
         y = bsr_matmul_pallas(
-            x2, bsr.indices, bsr.blocks, n=bsr.shape[1], bm=bm,
-            interpret=(mode == "interpret"),
+            x2, bsr, bm=bm, epilogue=epi, interpret=(mode == "interpret"),
         )
     return y.reshape(*lead, bsr.shape[1])
 
 
-@functools.partial(jax.jit, static_argnames=("n", "bm", "mode"))
+@functools.partial(jax.jit, static_argnames=("bm", "mode"))
 def bsr_planes_matmul(
     x: jnp.ndarray,              # (E, ..., K)
-    indices: jnp.ndarray,        # (E, grid_n, max_nnz)
-    blocks: jnp.ndarray,         # (E, grid_n, max_nnz, bk, bn)
+    planes: BSRPlanes,
     *,
-    n: int,
     bm: int = 128,
     mode: str = "auto",
+    epilogue: Optional[Epilogue] = None,
 ) -> jnp.ndarray:
-    """Fused gather-free per-plane matmul: y[e] = x[e] @ W_bsr[e].
+    """Fused gather-free per-plane matmul: y[e] = epilogue(x[e] @ W_bsr[e]).
 
     One call for the whole plane stack (the MoE expert dimension) —
-    no python loop over planes, no per-expert stack."""
+    no python loop over planes, no per-expert stack.  Epilogue
+    multiplier/residual are shaped (E, ..., n) like the output."""
     e = x.shape[0]
     lead = x.shape[1:-1]
     k = x.shape[-1]
+    n = planes.shape[-1]
     x3 = x.reshape(e, -1, k)
+    epi = None if epilogue is None else epilogue.map_operands(
+        lambda a: a.reshape(e, -1, a.shape[-1]))
     if _use_ref(mode):
-        y = _ref.bsr_planes_matmul_ref(x3, indices, blocks, n=n)
+        y = _ref.bsr_planes_matmul_ref(x3, planes, epilogue=epi)
     else:
         y = bsr_planes_matmul_pallas(
-            x3, indices, blocks, n=n, bm=bm, interpret=(mode == "interpret")
+            x3, planes, bm=bm, epilogue=epi, interpret=(mode == "interpret")
         )
     return y.reshape(e, *lead, n)
 

@@ -2,47 +2,34 @@
 
 ``bsr_matmul_ref`` is also the CPU *serving* path (kernels/ops.py routes
 here off-TPU), so it must honour the zero-skipping contract: it never
-reconstructs the dense weight.  Instead it gathers exactly the live
-block-rows of ``x`` named by the BSR indices, contracts them against the
-packed blocks with one batched einsum, and sums per output block-column
-— BSR columns partition the output, so no scatter is needed.  Padding
-slots (index -1) contribute zero (their blocks are zeroed at pack time
-and re-masked here for safety).  Work scales with ``nnz_blocks``, not
-``grid_k * grid_n`` — the same roofline scaling as the TPU kernel.
+reconstructs the dense weight.  It contracts the packed *flat store*
+directly — ONE batched ``(nnz, M, bk) @ (nnz, bk, bn)`` GEMM over the
+live tiles, then a sorted segment-sum over output block-columns (BSR
+columns partition the output, so no scatter is needed).  Work scales
+with the *true* ``nnz_blocks`` — not ``grid_n * max_nnz`` like the old
+per-column padded contraction, which at 75% sparsity did ~3x the live
+work because every column paid the worst column's slot count.  This is
+what makes prefill-shaped (large-M) packed GEMMs beat dense on CPU.
+
+Flat-store padding slots carry exact-zero blocks (pack time), so they
+contribute nothing wherever their (row 0, col 0) coordinates point — no
+re-masking pass over the weights per call.
+
+The fused ``Epilogue`` (bias / activation / SwiGLU gate / residual) is
+applied on the fp32 accumulator before the final cast, matching the
+Pallas kernel's in-VMEM epilogue bit-for-bit on the ref path.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
-from repro.core.packing import BSRWeight
+from repro.core.packing import BSRPlanes, BSRWeight
+from .epilogue import Epilogue, apply_epilogue
 
 __all__ = ["bsr_matmul_ref", "bsr_planes_matmul_ref", "structure_norms_ref"]
-
-
-def _bsr_cols(
-    x: jnp.ndarray,          # (M, gk * bk) — K already padded to the block grid
-    indices: jnp.ndarray,    # (grid_n, max_nnz) int32, -1 padded
-    blocks: jnp.ndarray,     # (grid_n, max_nnz, bk, bn)
-) -> jnp.ndarray:
-    """Per-column live-block contraction -> (M, grid_n * bn) fp32.
-
-    The slot dim folds into the contraction: each output block-column is
-    ONE (M, s*bk) @ (s*bk, bn) GEMM over its live tiles — batched over
-    grid_n only, so XLA lowers to a few big dots instead of grid_n*s tiny
-    ones (2x dense at 25% density on CPU, vs ~par for the naive
-    (gn, s)-batched form)."""
-    gn, s, bk, bn = blocks.shape
-    m = x.shape[0]
-    xb = x.reshape(m, x.shape[1] // bk, bk)                  # (M, gk, bk)
-    live = indices >= 0
-    # gather only the block-rows the live slots name (padding fetches row 0,
-    # then gets masked — the jnp analogue of the kernel's benign pad DMA)
-    xg = jnp.take(xb, jnp.maximum(indices, 0), axis=1)       # (M, gn, s, bk)
-    xg = jnp.moveaxis(xg, 0, 1).reshape(gn, m, s * bk)
-    wb = jnp.where(live[..., None, None], blocks, 0).astype(x.dtype)
-    y = jnp.einsum("jmk,jkn->jmn", xg, wb.reshape(gn, s * bk, bn),
-                   preferred_element_type=jnp.float32)       # (gn, M, bn)
-    return jnp.moveaxis(y, 0, 1).reshape(m, gn * bn)
 
 
 def _pad_k(x: jnp.ndarray, bk: int) -> jnp.ndarray:
@@ -53,39 +40,59 @@ def _pad_k(x: jnp.ndarray, bk: int) -> jnp.ndarray:
     return x
 
 
-def bsr_matmul_ref(x: jnp.ndarray, bsr: BSRWeight) -> jnp.ndarray:
-    """y = x @ W_bsr for x (M, K), contracting live blocks only."""
-    bk = bsr.blocking.bk
-    y = _bsr_cols(_pad_k(x, bk), bsr.indices, bsr.blocks)
-    return y[:, : bsr.shape[1]].astype(x.dtype)
+def bsr_matmul_ref(
+    x: jnp.ndarray,                  # (M, K)
+    bsr: BSRWeight,
+    *,
+    epilogue: Optional[Epilogue] = None,
+) -> jnp.ndarray:
+    """y = epilogue(x @ W_bsr) contracting the flat live-tile store only."""
+    bk, bn = bsr.blocking.bk, bsr.blocking.bn
+    gn = bsr.grid_n
+    xp = _pad_k(x, bk)
+    m = xp.shape[0]
+    # transpose x to block-row-major ONCE, then the per-tile gather is a
+    # cheap leading-axis take (xg rows are contiguous (M, bk) panels)
+    xt = jnp.swapaxes(xp.reshape(m, -1, bk), 0, 1)           # (gk, M, bk)
+    xg = jnp.take(xt, bsr.flat_rows, axis=0)                 # (Z, M, bk)
+    contrib = jnp.einsum("zmb,zbn->zmn", xg, bsr.blocks,
+                         preferred_element_type=jnp.float32)  # (Z, M, bn)
+    y = jax.ops.segment_sum(contrib, bsr.flat_cols, num_segments=gn,
+                            indices_are_sorted=True)          # (gn, M, bn)
+    y = jnp.moveaxis(y, 0, 1).reshape(m, gn * bn)[:, : bsr.shape[1]]
+    return apply_epilogue(y, epilogue).astype(x.dtype)
 
 
 def bsr_planes_matmul_ref(
-    x: jnp.ndarray,          # (E, M, K)
-    indices: jnp.ndarray,    # (E, grid_n, max_nnz) int32, -1 padded
-    blocks: jnp.ndarray,     # (E, grid_n, max_nnz, bk, bn)
+    x: jnp.ndarray,                  # (E, M, K)
+    planes: BSRPlanes,
     *,
-    n: int,
+    epilogue: Optional[Epilogue] = None,
 ) -> jnp.ndarray:
     """Fused per-plane BSR matmul -> (E, M, n) in x.dtype.
 
-    One segment-wise einsum over every plane's live blocks at once; a
-    fully-pruned plane costs only its padding slots."""
-    e, gn, s, bk, bn = blocks.shape
-    m = x.shape[1]
+    One batched GEMM over every plane's flat store at once; the segment
+    ids get a per-plane ``e * grid_n`` offset so a single sorted
+    segment-sum produces all planes' output columns.  A fully-pruned
+    plane costs only its zero-block padding slots."""
+    e, m, _ = x.shape
+    bk, bn = planes.blocking.bk, planes.blocking.bn
+    gn = planes.grid_n
+    n = planes.shape[-1]
+    z = planes.blocks.shape[1]
     xp = _pad_k(x, bk)
-    xb = xp.reshape(e, m, xp.shape[-1] // bk, bk)            # (E, M, gk, bk)
-    live = indices >= 0
+    xt = jnp.swapaxes(xp.reshape(e, m, -1, bk), 1, 2)        # (E, gk, M, bk)
     xg = jnp.take_along_axis(
-        xb, jnp.maximum(indices, 0).reshape(e, 1, gn * s, 1), axis=2,
-    ).reshape(e, m, gn, s, bk)
-    # fold slots into the contraction (see _bsr_cols): one GEMM per
-    # (plane, block-column) pair, batched over (E, grid_n)
-    xg = jnp.moveaxis(xg, 1, 2).reshape(e, gn, m, s * bk)
-    wb = jnp.where(live[..., None, None], blocks, 0).astype(x.dtype)
-    y = jnp.einsum("ejmk,ejkn->ejmn", xg, wb.reshape(e, gn, s * bk, bn),
-                   preferred_element_type=jnp.float32)       # (E, gn, M, bn)
-    return jnp.moveaxis(y, 1, 2).reshape(e, m, gn * bn)[:, :, :n].astype(x.dtype)
+        xt, planes.flat_rows[:, :, None, None], axis=1)      # (E, Z, M, bk)
+    contrib = jnp.einsum("ezmb,ezbn->ezmn", xg, planes.blocks,
+                         preferred_element_type=jnp.float32)  # (E, Z, M, bn)
+    segs = (planes.flat_cols
+            + jnp.arange(e, dtype=jnp.int32)[:, None] * gn).reshape(-1)
+    y = jax.ops.segment_sum(contrib.reshape(e * z, m, bn), segs,
+                            num_segments=e * gn, indices_are_sorted=True)
+    y = jnp.moveaxis(y.reshape(e, gn, m, bn), 1, 2)          # (E, M, gn, bn)
+    y = y.reshape(e, m, gn * bn)[:, :, :n]
+    return apply_epilogue(y, epilogue).astype(x.dtype)
 
 
 def structure_norms_ref(w: jnp.ndarray, bk: int, bn: int) -> jnp.ndarray:

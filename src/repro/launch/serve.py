@@ -32,6 +32,15 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy argmax")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="sample from the k highest-probability tokens")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus sampling probability mass")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token: finished rows emit it and the scan "
+                         "body early-exits once all rows are done")
     ap.add_argument("--pruned", type=float, default=None, metavar="SPARSITY",
                     help="knapsack-prune to this structure sparsity and "
                          "serve through the zero-skipping BSR path")
@@ -95,9 +104,15 @@ def main() -> int:
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return tok, c
 
-    # decode: ONE lm_generate call (lax.scan) emits every token on device
+    # decode: ONE lm_generate call (lax.scan) emits every token on device;
+    # sampling (temperature/top-k/top-p) and EOS early-exit run inside the
+    # scan — still zero host round-trips per token
+    sample_key = jax.random.PRNGKey(args.seed + 1)
     generate = jax.jit(
-        lambda p, c, t, l: lm_generate(p, c, t, l, args.gen, cfg))
+        lambda p, c, t, l: lm_generate(
+            p, c, t, l, args.gen, cfg,
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, eos_id=args.eos_id, key=sample_key))
 
     # warm both calls once (trace + XLA compile) so the printed numbers
     # measure steady-state serving, not compilation

@@ -39,18 +39,23 @@ def mlp_init(
 
 
 def mlp_apply(p: Dict, x: jnp.ndarray, *, activation: str = "silu",
-              accum=None, out_seq: str = "seq") -> jnp.ndarray:
+              accum=None, out_seq: str = "seq",
+              residual=None) -> jnp.ndarray:
+    """Gated/plain MLP with the whole tail fused into the matmul epilogues
+    (DESIGN.md §8): the gate matmul applies ``act(gate) * up`` on its fp32
+    accumulator and the down projection adds ``residual`` the same way, so
+    the packed path materializes no standalone (B, T, d_ff) activation or
+    (B, T, d_model) pre-residual tensor.  With ``residual`` given the
+    return value IS the updated residual stream."""
     accum = accum or jnp.float32
-    up = dense(p["w_up"], x)
-    up = logical_constraint(up, "batch", "seq", "mlp")
-    act = getattr(jax.nn, activation)
     if "w_gate" in p:
-        gate = dense(p["w_gate"], x)
-        gate = logical_constraint(gate, "batch", "seq", "mlp")
-        h = act(gate) * up
+        up = dense(p["w_up"], x)
+        up = logical_constraint(up, "batch", "seq", "mlp")
+        h = dense(p["w_gate"], x, activation=activation, multiplier=up)
     else:
-        h = act(up)
-    out = dense(p["w_down"], h.astype(x.dtype), accum=accum)
+        h = dense(p["w_up"], x, activation=activation)
+    h = logical_constraint(h, "batch", "seq", "mlp")
+    out = dense(p["w_down"], h, accum=accum, residual=residual)
     # out_seq="res_seq" under Megatron-SP: the row-parallel partial sums
     # reduce-scatter straight into the seq-sharded residual (no AR+slice)
     return logical_constraint(out, "batch", out_seq, "embed")

@@ -23,10 +23,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import BSRWeight
+from repro.core.packing import BSRPlanes, BSRWeight
 from repro.distributed.sharding import logical_constraint
-from repro.kernels.ops import bsr_matmul, bsr_planes_matmul
-from repro.sparse.transform import BSRPlanes
+from repro.kernels.ops import (
+    Epilogue,
+    apply_epilogue,
+    bsr_matmul,
+    bsr_planes_matmul,
+    make_epilogue,
+)
 
 __all__ = [
     "matmul", "expert_matmul",
@@ -64,43 +69,65 @@ def dense_init(
     return p
 
 
-def matmul(x: jnp.ndarray, w, *, accum=jnp.float32) -> jnp.ndarray:
+def matmul(x: jnp.ndarray, w, *, accum=jnp.float32, epilogue=None) -> jnp.ndarray:
     """x (..., K) @ w (K, N) -> (..., N) in ``accum`` dtype.
 
     The sparse-execution dispatch point: a packed ``BSRWeight`` routes to
     the zero-skipping BSR kernel (ref on CPU, Pallas on TPU); dense arrays
     take the einsum path.  Everything above (dense/ffn/attention/moe and
-    both the forward and decode stacks) is agnostic to which it gets."""
+    both the forward and decode stacks) is agnostic to which it gets.
+
+    ``epilogue`` (kernels.Epilogue) fuses bias/activation/gate/residual
+    into the kernel on the packed path; the dense path applies the same
+    fp32 op order on the einsum output, so both paths stay bit-compatible
+    with the unfused composition (DESIGN.md §8)."""
     if isinstance(w, BSRWeight):
-        return bsr_matmul(x, w).astype(accum)
-    return jnp.einsum("...k,kn->...n", x, w, preferred_element_type=accum)
+        return bsr_matmul(x, w, epilogue=epilogue).astype(accum)
+    y = jnp.einsum("...k,kn->...n", x, w, preferred_element_type=accum)
+    return apply_epilogue(y, epilogue)
 
 
-def expert_matmul(h: jnp.ndarray, w, *, accum=jnp.float32) -> jnp.ndarray:
+def expert_matmul(h: jnp.ndarray, w, *, accum=jnp.float32, epilogue=None) -> jnp.ndarray:
     """Batched expert matmul (g, E, C, d) @ (E, d, f) -> (g, E, C, f).
 
     ``BSRPlanes`` (flattened per-expert BSR) issue ONE fused zero-skipping
     kernel call over the whole plane stack — no python loop over experts,
     no per-expert output stack; a fully-pruned expert costs only its
-    skipped padding slots.  Dense 3-D weights take the batched einsum."""
+    skipped padding slots.  Dense 3-D weights take the batched einsum.
+    ``epilogue`` operands (multiplier/residual) are output-shaped
+    (g, E, C, f); the packed path transposes them alongside ``h``."""
     if isinstance(w, BSRPlanes):
-        g, e, c, d = h.shape
         he = jnp.moveaxis(h, 1, 0)                            # (E, g, C, d)
-        y = bsr_planes_matmul(he, w.indices, w.blocks, n=w.shape[-1])
+        epi = None if epilogue is None else epilogue.map_operands(
+            lambda a: jnp.moveaxis(a, 1, 0))
+        y = bsr_planes_matmul(he, w, epilogue=epi)
         return jnp.moveaxis(y, 0, 1).astype(accum)            # (g, E, C, f)
-    return jnp.einsum("gecd,edf->gecf", h, w, preferred_element_type=accum)
+    y = jnp.einsum("gecd,edf->gecf", h, w, preferred_element_type=accum)
+    return apply_epilogue(y, epilogue)
 
 
-def dense(p: Dict[str, jnp.ndarray], x: jnp.ndarray, *, accum=jnp.float32) -> jnp.ndarray:
-    """Matmul with selectable accumulation dtype.
+def dense(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    accum=jnp.float32,
+    activation: Optional[str] = None,
+    multiplier: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Matmul with selectable accumulation dtype and a fused epilogue.
 
     ``accum=bfloat16`` on *row-parallel* matmuls (wo, w_down) lets GSPMD
     all-reduce the partial sums in bf16 — halves the dominant TP collective
     bytes (EXPERIMENTS.md §Perf); the MXU still accumulates each partial in
-    fp32 internally."""
-    y = matmul(x, p["kernel"], accum=accum)
-    if "bias" in p:
-        y = y + p["bias"].astype(accum)
+    fp32 internally.
+
+    ``activation``/``multiplier``/``residual`` (plus the layer bias) form
+    the fused tail ``act(y + bias) * multiplier + residual`` — one kernel
+    on the packed path instead of three (M, N) round-trips."""
+    epi = make_epilogue(bias=p.get("bias"), activation=activation,
+                        multiplier=multiplier, residual=residual)
+    y = matmul(x, p["kernel"], accum=accum, epilogue=epi)
     return y.astype(x.dtype)
 
 

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import _concrete_mesh, logical_constraint
+from repro.kernels.ops import Epilogue
 from .layers import expert_matmul, matmul, truncated_normal_init
 
 
@@ -134,14 +135,16 @@ def moe_apply(
     cap_ax = "expert_cap" if _cap_axis_ok(num_experts) else None
     buffer = logical_constraint(buffer, "batch", None, cap_ax, None)
 
-    # --- expert compute (EP batched matmul; BSRPlanes skip pruned tiles) -----
-    act = getattr(jax.nn, activation)
-    up = expert_matmul(buffer, p["experts_up"], accum=jnp.float32)
+    # --- expert compute (EP batched matmul; BSRPlanes skip pruned tiles;
+    # activation + SwiGLU gate fused into the matmul epilogue) --------------
     if "experts_gate" in p:
-        gt = expert_matmul(buffer, p["experts_gate"], accum=jnp.float32)
-        h = act(gt) * up
+        up = expert_matmul(buffer, p["experts_up"], accum=jnp.float32)
+        h = expert_matmul(buffer, p["experts_gate"], accum=jnp.float32,
+                          epilogue=Epilogue(activation=activation,
+                                            multiplier=up))
     else:
-        h = act(up)
+        h = expert_matmul(buffer, p["experts_up"], accum=jnp.float32,
+                          epilogue=Epilogue(activation=activation))
     h = h.astype(x.dtype)
     h = logical_constraint(h, "batch", None, cap_ax, None)
     out_e = expert_matmul(h, p["experts_down"],

@@ -19,6 +19,12 @@ Topology: tokens sharded over the DP axes, experts over "model"
 Everything inside is shard-local jnp (differentiable; all_to_all's
 transpose is all_to_all).  Requires E % model_size == 0 (mixtral's E=8 on
 a 16-way axis keeps the GSPMD fallback).
+
+Sparse execution (DESIGN.md §8): packed ``BSRPlanes`` expert weights run
+the shard-local FFN through the fused zero-skipping plane kernel with the
+activation/SwiGLU gate in the matmul epilogue; ``transform.planes_pspec``
+supplies the matching shard_map specs so the packed tree needs no
+densify and no special casing at the call site.
 """
 from __future__ import annotations
 
@@ -30,9 +36,25 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.packing import BSRPlanes
 from repro.distributed.sharding import _concrete_mesh, current_rules, shard_map
+from repro.kernels.ops import Epilogue, apply_epilogue, bsr_planes_matmul
+from repro.sparse.transform import planes_pspec
 
 __all__ = ["moe_alltoall_apply", "alltoall_available"]
+
+
+def _expert_mm(h: jnp.ndarray, w, *, epilogue=None) -> jnp.ndarray:
+    """Shard-local expert matmul (E_loc, C, d) @ (E_loc, d, f) -> fp32.
+
+    ``BSRPlanes`` leaves (the shard's E_loc planes of the packed expert
+    stack) run the fused zero-skipping kernel with the epilogue applied
+    in-kernel; dense 3-D weights take the batched einsum with the same
+    fp32 epilogue math."""
+    if isinstance(w, BSRPlanes):
+        return bsr_planes_matmul(h, w, epilogue=epilogue).astype(jnp.float32)
+    y = jnp.einsum("ecd,edf->ecf", h, w, preferred_element_type=jnp.float32)
+    return apply_epilogue(y, epilogue)
 
 
 def alltoall_available(num_experts: int) -> bool:
@@ -53,7 +75,6 @@ def _local_moe(x_loc, p, *, num_experts, top_k, capacity_factor, activation,
     e_loc = num_experts // m
     c_send = max(int(math.ceil(t * top_k * capacity_factor / m)), top_k)
     c_exp = max(int(math.ceil(m * c_send / e_loc)), 1)
-    act = getattr(jax.nn, activation)
 
     # --- routing ------------------------------------------------------------
     logits = jnp.einsum("td,de->te", x_loc, p["router"]["kernel"],
@@ -111,16 +132,17 @@ def _local_moe(x_loc, p, *, num_experts, top_k, capacity_factor, activation,
     ebuf = ebuf.at[le2c, pos2c].add(
         jnp.where(keep2[:, None], rx[order2], 0), mode="drop")
 
-    up = jnp.einsum("ecd,edf->ecf", ebuf, p["experts_up"],
-                    preferred_element_type=jnp.float32)
+    # packed (BSRPlanes) or dense expert FFN, activation/gate fused into
+    # the matmul epilogue either way (DESIGN.md §8)
     if "experts_gate" in p:
-        gt = jnp.einsum("ecd,edf->ecf", ebuf, p["experts_gate"],
-                        preferred_element_type=jnp.float32)
-        h = act(gt) * up
+        up = _expert_mm(ebuf, p["experts_up"])
+        h = _expert_mm(ebuf, p["experts_gate"],
+                       epilogue=Epilogue(activation=activation, multiplier=up))
     else:
-        h = act(up)
-    out_e = jnp.einsum("ecf,efd->ecd", h.astype(x_loc.dtype), p["experts_down"],
-                       preferred_element_type=jnp.float32).astype(x_loc.dtype)
+        h = _expert_mm(ebuf, p["experts_up"],
+                       epilogue=Epilogue(activation=activation))
+    out_e = _expert_mm(h.astype(x_loc.dtype),
+                       p["experts_down"]).astype(x_loc.dtype)
 
     # --- stage 4: inverse route back ------------------------------------------
     y_sorted = jnp.where(keep2[:, None], out_e[le2c, pos2c], 0)
@@ -160,13 +182,17 @@ def moe_alltoall_apply(
         y, aux = body(xs.reshape(t_loc, d), params)
         return y.reshape(xs.shape), aux
 
+    # per-leaf specs: dense expert stacks shard the plane (E) dim on the
+    # model axis; packed BSRPlanes leaves shard the plane dim of every
+    # component array (transform.planes_pspec), so the packed tree flows
+    # through the same shard_map unchanged
     pspec = {
         "router": {"kernel": P()},
-        "experts_up": P("model", None, None),
-        "experts_down": P("model", None, None),
+        "experts_up": planes_pspec(p["experts_up"], "model"),
+        "experts_down": planes_pspec(p["experts_down"], "model"),
     }
     if "experts_gate" in p:
-        pspec["experts_gate"] = P("model", None, None)
+        pspec["experts_gate"] = planes_pspec(p["experts_gate"], "model")
     xspec = P(dp_axes if dp_axes else None, None, None)
 
     fn = shard_map(

@@ -271,10 +271,11 @@ def _apply_layer(
                      positions, enc_out, raw_x=x)
     x = _residual(cfg, x + h)
     if spec.mlp == "dense":
-        x = x + mlp_apply(p["mlp"], _norm_apply(cfg, p["post_norm"], x),
-                          activation=cfg.activation, accum=_accum(cfg),
-                          out_seq=_out_seq(cfg))
-        x = _residual(cfg, x)
+        # the residual rides the w_down epilogue (fused on packed params)
+        x = _residual(cfg, mlp_apply(
+            p["mlp"], _norm_apply(cfg, p["post_norm"], x),
+            activation=cfg.activation, accum=_accum(cfg),
+            out_seq=_out_seq(cfg), residual=x))
     elif spec.mlp == "moe":
         xn = _norm_apply(cfg, p["post_norm"], x)
         if cfg.moe_impl == "alltoall" and alltoall_available(cfg.moe_experts):
@@ -480,8 +481,8 @@ def lm_decode(
             h = jnp.zeros_like(x)
         x = x + h
         if spec.mlp == "dense":
-            x = x + mlp_apply(lp["mlp"], _norm_apply(cfg, lp["post_norm"], x),
-                              activation=cfg.activation)
+            x = mlp_apply(lp["mlp"], _norm_apply(cfg, lp["post_norm"], x),
+                          activation=cfg.activation, residual=x)
         elif spec.mlp == "moe":
             y, _ = moe_decode(lp["moe"], _norm_apply(cfg, lp["post_norm"], x),
                               num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
@@ -492,6 +493,10 @@ def lm_decode(
     x = _norm_apply(cfg, params["final_norm"], x)
     head = params.get("lm_head", params["embed"])
     logits = unembed_logits(head, x)
+    if cfg.logits_softcap:
+        # keep decode logits consistent with lm_forward/lm_prefill —
+        # sampling inside lm_generate sees the same capped distribution
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
     return logits, new_caches
 
 
@@ -568,10 +573,11 @@ def lm_prefill(
             h = jnp.zeros_like(x)
         x = _residual(cfg, x + h)
         if spec.mlp == "dense":
-            x = x + mlp_apply(lp["mlp"], _norm_apply(cfg, lp["post_norm"], x),
-                              activation=cfg.activation, accum=_accum(cfg),
-                              out_seq=_out_seq(cfg))
-            x = _residual(cfg, x)
+            # keep in sync with _apply_layer: residual fused into w_down
+            x = _residual(cfg, mlp_apply(
+                lp["mlp"], _norm_apply(cfg, lp["post_norm"], x),
+                activation=cfg.activation, accum=_accum(cfg),
+                out_seq=_out_seq(cfg), residual=x))
         elif spec.mlp == "moe":
             xn = _norm_apply(cfg, lp["post_norm"], x)
             if cfg.moe_impl == "alltoall" and alltoall_available(cfg.moe_experts):
@@ -597,6 +603,41 @@ def lm_prefill(
     return logits, new_caches
 
 
+def _nucleus_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """Top-p (nucleus) mask: keep the smallest prefix of the
+    probability-sorted vocab whose mass reaches ``top_p`` (always at
+    least the top-1 token); everything else goes to -inf."""
+    srt = jnp.sort(logits, axis=-1)[..., ::-1]              # descending
+    probs = jax.nn.softmax(srt, axis=-1)
+    # a token stays if the mass strictly *before* it is < top_p
+    keep = (jnp.cumsum(probs, axis=-1) - probs) < top_p     # (.., V) sorted
+    kth = jnp.sum(keep, axis=-1, keepdims=True)             # #kept >= 1
+    thresh = jnp.take_along_axis(srt, kth - 1, axis=-1)
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def _select_token(
+    logits: jnp.ndarray,            # (B, V) fp32
+    rng: jnp.ndarray,
+    *,
+    temperature: float,
+    top_k: Optional[int],
+    top_p: Optional[float],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy argmax (temperature <= 0) or filtered sampling — all on
+    device.  Returns ((B,) int32 tokens, advanced rng)."""
+    if not temperature or temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), rng
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k is not None and 0 < top_k < lg.shape[-1]:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    if top_p is not None and top_p < 1.0:
+        lg = _nucleus_filter(lg, top_p)
+    rng, sub = jax.random.split(rng)
+    return jax.random.categorical(sub, lg, axis=-1).astype(jnp.int32), rng
+
+
 def lm_generate(
     params: Dict,
     caches: List[Dict],
@@ -604,24 +645,57 @@ def lm_generate(
     start_len: jnp.ndarray,         # scalar int32: tokens already in cache
     num_tokens: int,                # static: tokens to emit
     cfg: ModelConfig,
+    *,
+    temperature: float = 0.0,       # <= 0: greedy argmax
+    top_k: Optional[int] = None,
+    top_p: Optional[float] = None,
+    eos_id: Optional[int] = None,
+    key: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, List[Dict]]:
-    """On-device greedy decode loop: ``num_tokens`` steps in ONE
-    ``jax.lax.scan`` — the caches ride the carry and the argmax happens on
-    device, so there is zero host transfer per generated token.
+    """On-device decode loop: ``num_tokens`` steps in ONE ``jax.lax.scan``
+    — the caches ride the carry and token selection (greedy argmax, or
+    temperature/top-k/top-p sampling with ``key``) happens on device, so
+    there is zero host transfer per generated token.
+
+    ``eos_id`` turns on EOS handling *inside* the scan: per-sequence
+    ``done`` flags ride the carry, finished rows keep emitting ``eos_id``,
+    and once every row is done the decode step body is skipped via
+    ``lax.cond`` (the carry passes through untouched) — early exit without
+    a single host sync.
 
     Emits the running token *before* each decode step (so
     ``tokens[:, 0] == first_token``), matching the per-token serve loop it
     replaces.  Returns (tokens (B, num_tokens) int32, caches)."""
     start_len = jnp.asarray(start_len, jnp.int32)
+    b = first_token.shape[0]
+    select = functools.partial(
+        _select_token, temperature=temperature, top_k=top_k, top_p=top_p)
+    rng0 = key if key is not None else jax.random.PRNGKey(0)
+
+    def live_step(i, operand):
+        tok, rng, cs = operand
+        logits, cs = lm_decode(params, cs, {"tokens": tok}, start_len + i, cfg)
+        nxt, rng = select(logits[:, -1], rng)
+        return nxt[:, None], rng, cs
 
     def step(carry, i):
-        tok, cs = carry
-        logits, cs = lm_decode(params, cs, {"tokens": tok}, start_len + i, cfg)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        return (nxt, cs), tok[:, 0]
+        tok, done, rng, cs = carry
+        emit = tok[:, 0]
+        if eos_id is not None:
+            done = done | (emit == eos_id)
+            # mask-and-carry: skip the whole decode step once every row
+            # is finished; finished rows keep emitting eos_id
+            nxt, rng, cs = jax.lax.cond(
+                jnp.all(done), lambda op: op, functools.partial(live_step, i),
+                (tok, rng, cs))
+            nxt = jnp.where(done[:, None], jnp.asarray(eos_id, jnp.int32), nxt)
+        else:
+            nxt, rng, cs = live_step(i, (tok, rng, cs))
+        return (nxt, done, rng, cs), emit
 
-    (_, caches), toks = jax.lax.scan(
-        step, (first_token.astype(jnp.int32), caches),
-        jnp.arange(num_tokens, dtype=jnp.int32),
+    carry0 = (first_token.astype(jnp.int32), jnp.zeros((b,), bool),
+              rng0, caches)
+    (_, _, _, caches), toks = jax.lax.scan(
+        step, carry0, jnp.arange(num_tokens, dtype=jnp.int32),
     )
     return jnp.moveaxis(toks, 0, 1), caches

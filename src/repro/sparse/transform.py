@@ -11,18 +11,20 @@ used by the equivalence tests.
 The transform is host-side (numpy): packing happens once at serving
 start, not inside a jitted step.  Packed leaves are registered pytrees,
 so the resulting params tree jits, remats and shards like the dense one.
+``BSRWeight``/``BSRPlanes`` themselves live in ``core/packing.py`` (next
+to ``pack_bsr``); ``BSRPlanes`` is re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.masks import _get_path, _set_path, build_structures
-from repro.core.packing import BSRWeight, bsr_to_dense, pack_bsr
+from repro.core.packing import BSRPlanes, BSRWeight, bsr_to_dense, pack_bsr
 from repro.core.structures import BlockingSpec, LayerStructures, PRUNABLE_MIN_SIZE
 
 __all__ = [
@@ -30,92 +32,9 @@ __all__ = [
     "pack_params",
     "unpack_params",
     "is_packed_leaf",
+    "planes_pspec",
     "sparsity_summary",
 ]
-
-
-@dataclasses.dataclass
-class BSRPlanes:
-    """Flattened per-plane BSR stack for a >2-D weight (MoE (E, D, F)).
-
-    The per-plane ``(indices, blocks)`` pairs are concatenated into ONE
-    BSR: the slot dim is padded to the stack-wide ``max_nnz`` and the
-    plane offset into the concatenated ``E * grid_n`` block-columns is
-    implicit in the leading axis — so ``expert_matmul`` issues a single
-    fused kernel call (``kernels.ops.bsr_planes_matmul``) instead of a
-    python loop + stack over planes.  Pruning every tile of a plane
-    removes the whole expert — the paper's coarse structure; a dead
-    plane contributes only `pl.when`-skipped padding slots.
-    """
-
-    indices: jnp.ndarray            # (E, grid_n, max_nnz) int32, -1 padded
-    blocks: jnp.ndarray             # (E, grid_n, max_nnz, bk, bn)
-    shape: Tuple[int, ...]          # full dense shape, leading dims included
-    blocking: BlockingSpec          # effective (clamped) tile shape
-
-    @classmethod
-    def from_planes(cls, planes: Tuple[BSRWeight, ...],
-                    shape: Tuple[int, ...]) -> "BSRPlanes":
-        """Concatenate independent per-plane BSRWeights (same (K, N) and
-        blocking) into the fused layout, padding slots to the max."""
-        max_nnz = max(p.max_nnz for p in planes)
-        idx, blk = [], []
-        for p in planes:
-            pad = max_nnz - p.max_nnz
-            idx.append(jnp.pad(p.indices, ((0, 0), (0, pad)),
-                               constant_values=-1))
-            blk.append(jnp.pad(p.blocks, ((0, 0), (0, pad), (0, 0), (0, 0))))
-        return cls(
-            indices=jnp.stack(idx),
-            blocks=jnp.stack(blk),
-            shape=tuple(int(s) for s in shape),
-            blocking=planes[0].blocking,
-        )
-
-    @property
-    def num_planes(self) -> int:
-        return self.indices.shape[0]
-
-    @property
-    def grid_k(self) -> int:
-        return -(-self.shape[-2] // self.blocking.bk)
-
-    @property
-    def grid_n(self) -> int:
-        return self.indices.shape[1]
-
-    @property
-    def max_nnz(self) -> int:
-        return self.indices.shape[2]
-
-    @property
-    def planes(self) -> Tuple[BSRWeight, ...]:
-        """Per-plane BSRWeight views into the fused arrays (oracles/tests)."""
-        kn = (int(self.shape[-2]), int(self.shape[-1]))
-        return tuple(
-            BSRWeight(indices=self.indices[e], blocks=self.blocks[e],
-                      shape=kn, blocking=self.blocking)
-            for e in range(self.num_planes)
-        )
-
-    def density(self) -> float:
-        nnz = int(jnp.sum(self.indices >= 0))
-        return nnz / max(self.num_planes * self.grid_k * self.grid_n, 1)
-
-    def tree_flatten(self):
-        return (self.indices, self.blocks), (self.shape, self.blocking)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        indices, blocks = children
-        shape, blocking = aux
-        return cls(indices=indices, blocks=blocks, shape=shape,
-                   blocking=blocking)
-
-
-jax.tree_util.register_pytree_node(
-    BSRPlanes, BSRPlanes.tree_flatten, BSRPlanes.tree_unflatten
-)
 
 
 def is_packed_leaf(x: Any) -> bool:
@@ -214,15 +133,34 @@ def sparsity_summary(packed: Mapping[str, Any]) -> Dict[str, Any]:
             continue
         path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
         per_path[path] = leaf.density()
-        if isinstance(leaf, BSRWeight):
-            nnz += leaf.nnz_blocks
-            total += leaf.grid_k * leaf.grid_n
-        else:
-            nnz += int(jnp.sum(leaf.indices >= 0))
-            total += leaf.num_planes * leaf.grid_k * leaf.grid_n
+        nnz += leaf.nnz_blocks
+        planes = leaf.num_planes if isinstance(leaf, BSRPlanes) else 1
+        total += planes * leaf.grid_k * leaf.grid_n
     return {
         "per_path": per_path,
         "nnz_blocks": int(nnz),
         "total_blocks": int(total),
         "density": nnz / max(total, 1),
     }
+
+
+def planes_pspec(leaf: Any, plane_axis: str):
+    """``shard_map``/GSPMD PartitionSpec tree for an expert-weight leaf.
+
+    Dense (E, D, F) stacks shard the plane dim on ``plane_axis``; a
+    ``BSRPlanes`` leaf gets the matching per-array specs — the plane dim
+    of every component array is sharded, per-plane index maps and the
+    flat tile store ride along replicated within the shard.  This is what
+    lets the packed tree flow through ``moe_alltoall``'s ``shard_map``
+    unchanged: E_local planes per shard, no densify, no gather."""
+    if isinstance(leaf, BSRPlanes):
+        return BSRPlanes(
+            indices=P(plane_axis, None, None),
+            slots=P(plane_axis, None, None),
+            blocks=P(plane_axis, None, None, None),
+            flat_rows=P(plane_axis, None),
+            flat_cols=P(plane_axis, None),
+            shape=leaf.shape, blocking=leaf.blocking,
+            plane_nnz=leaf.plane_nnz,
+        )
+    return P(plane_axis, None, None)

@@ -5,14 +5,20 @@ import numpy as np
 import pytest
 
 from repro.core import BlockingSpec, pack_bsr
-from repro.kernels import bsr_matmul, bsr_planes_matmul, structure_norms
+from repro.core.packing import BSRPlanes
+from repro.kernels import (
+    Epilogue,
+    apply_epilogue,
+    bsr_matmul,
+    bsr_planes_matmul,
+    structure_norms,
+)
 from repro.kernels import ref
 from repro.kernels.block_sparse_matmul import (
     bsr_matmul_pallas,
     bsr_planes_matmul_pallas,
 )
 from repro.kernels.structure_norms import structure_norms_pallas
-from repro.sparse.transform import BSRPlanes
 
 SHAPES = [
     # (m, k, n, bk, bn, bm, density)
@@ -22,6 +28,7 @@ SHAPES = [
     (8, 130, 50, 32, 32, 8, 0.6),       # ragged tails
     (16, 64, 64, 64, 64, 16, 0.0),      # fully pruned
     (256, 384, 512, 128, 256, 128, 0.4),
+    (1, 512, 256, 128, 128, 1, 0.25),   # decode-shaped single row
 ]
 DTYPES = [jnp.float32, jnp.bfloat16]
 
@@ -42,7 +49,7 @@ def test_bsr_matmul_matches_oracle(shape, dtype):
     rng = np.random.default_rng(hash(shape) % 2**31)
     bsr, w, mask = _make_bsr(rng, k, n, bk, bn, density, dtype)
     x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
-    got = bsr_matmul_pallas(x, bsr.indices, bsr.blocks, n=n, bm=bm, interpret=True)
+    got = bsr_matmul_pallas(x, bsr, bm=bm, interpret=True)
     want = ref.bsr_matmul_ref(x, bsr)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(
@@ -58,10 +65,29 @@ def test_bsr_matmul_skips_pruned_blocks(shape):
     rng = np.random.default_rng(0)
     bsr, w, mask = _make_bsr(rng, k, n, bk, bn, density, jnp.float32)
     x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
-    got = bsr_matmul_pallas(x, bsr.indices, bsr.blocks, n=n, bm=bm, interpret=True)
+    got = bsr_matmul_pallas(x, bsr, bm=bm, interpret=True)
     dense = jnp.asarray(w * mask)
     want = x @ dense
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_flat_store_scales_with_true_nnz():
+    """The flat store holds exactly the live tiles — no per-column padding
+    copy of the weights (the prefill-shaped work contract, DESIGN.md §8)."""
+    rng = np.random.default_rng(2)
+    bsr, w, mask = _make_bsr(rng, 512, 2048, 128, 128, 0.25, jnp.float32)
+    assert bsr.blocks.shape[0] == bsr.nnz_blocks
+    assert bsr.blocks.shape[0] < bsr.grid_n * bsr.max_nnz
+    # the per-column map and the flat store agree tile-for-tile
+    idx = np.asarray(bsr.indices)
+    slots = np.asarray(bsr.slots)
+    for j in range(bsr.grid_n):
+        for s in range(bsr.max_nnz):
+            if idx[j, s] < 0:
+                continue
+            z = slots[j, s]
+            assert np.asarray(bsr.flat_rows)[z] == idx[j, s]
+            assert np.asarray(bsr.flat_cols)[z] == j
 
 
 @pytest.mark.parametrize("kshape", [(64, 64), (128, 384), (100, 36), (8, 1024)])
@@ -92,15 +118,14 @@ def _make_planes(rng, e, k, n, bk, bn, densities, dtype=jnp.float32):
 
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_bsr_planes_matmul_matches_oracle(dtype):
-    """Fused plane kernel (interpret) vs the segment-wise ref vs dense —
+    """Fused plane kernel (interpret) vs the flat-store ref vs dense —
     mixed per-plane densities including a fully-pruned plane."""
     rng = np.random.default_rng(3)
     e, m, k, n, bk, bn = 3, 16, 128, 96, 32, 32
     fused, dense = _make_planes(rng, e, k, n, bk, bn, [0.6, 0.0, 1.0], dtype)
     x = jnp.asarray(rng.normal(size=(e, m, k)).astype(np.float32)).astype(dtype)
-    got_pl = bsr_planes_matmul_pallas(
-        x, fused.indices, fused.blocks, n=n, bm=16, interpret=True)
-    got_ref = ref.bsr_planes_matmul_ref(x, fused.indices, fused.blocks, n=n)
+    got_pl = bsr_planes_matmul_pallas(x, fused, bm=16, interpret=True)
+    got_ref = ref.bsr_planes_matmul_ref(x, fused)
     want = jnp.einsum("emk,ekn->emn", x.astype(jnp.float32),
                       jnp.asarray(dense))
     tol = 1e-3 if dtype == jnp.float32 else 5e-2
@@ -108,6 +133,16 @@ def test_bsr_planes_matmul_matches_oracle(dtype):
                                np.asarray(want), atol=tol, rtol=tol)
     np.testing.assert_allclose(np.asarray(got_pl, np.float32),
                                np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_planes_flat_cols_stay_sorted_through_padding():
+    """BSRPlanes padding must keep every plane's flat_cols monotonic —
+    the ref's segment-sum declares indices_are_sorted=True (unequal
+    per-plane live counts force padding on the sparser planes)."""
+    rng = np.random.default_rng(17)
+    fused, _ = _make_planes(rng, 3, 128, 96, 32, 32, [0.3, 1.0, 0.0])
+    fc = np.asarray(fused.flat_cols)
+    assert (np.diff(fc, axis=1) >= 0).all()
 
 
 def test_bsr_refs_never_densify():
@@ -146,7 +181,7 @@ def test_ops_bsr_planes_wrapper_modes():
     x = jnp.asarray(rng.normal(size=(e, 3, 5, k)).astype(np.float32))
     want = jnp.einsum("egck,ekn->egcn", x, jnp.asarray(dense))
     for mode in ("auto", "interpret"):
-        got = bsr_planes_matmul(x, fused.indices, fused.blocks, n=n, mode=mode)
+        got = bsr_planes_matmul(x, fused, mode=mode)
         assert got.shape == (e, 3, 5, n)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-3, err_msg=mode)
@@ -163,3 +198,101 @@ def test_ops_wrappers_batched():
 
     nn = structure_norms(jnp.asarray(w), bk=64, bn=64)
     assert nn.shape == (2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue (DESIGN.md §8): bias / activation / gate / residual
+# ---------------------------------------------------------------------------
+
+EPI_SPECS = ["bias", "gelu", "bias+silu+mult", "bias+gelu+mult+res"]
+
+
+def _build_epilogue(rng, m, n, spec):
+    """(Epilogue, unfused-composition closure) for a named spec."""
+    bias = mult = res = act = None
+    if "bias" in spec:
+        bias = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    for a in ("gelu", "silu"):
+        if a in spec:
+            act = a
+    if "mult" in spec:
+        mult = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    if "res" in spec:
+        res = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    epi = Epilogue(bias=bias, multiplier=mult, residual=res, activation=act)
+
+    def unfused(y):
+        if bias is not None:
+            y = y + bias
+        if act is not None:
+            y = getattr(jax.nn, act)(y)
+        if mult is not None:
+            y = y * mult
+        if res is not None:
+            y = y + res
+        return y
+
+    return epi, unfused
+
+
+@pytest.mark.parametrize("m", [1, 64])   # decode- and prefill-shaped grids
+@pytest.mark.parametrize("spec", EPI_SPECS)
+def test_interpret_grid_epilogue_fused(m, spec):
+    """The fused in-kernel epilogue (interpret mode, bm-tiled grid: M=1
+    decode-shaped and M=64 prefill-shaped with 2 row tiles) matches the
+    unfused composition applied to the plain kernel output."""
+    rng = np.random.default_rng(len(spec) + m)
+    k, n = 256, 128
+    bsr, w, mask = _make_bsr(rng, k, n, 64, 64, 0.5, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    epi, unfused = _build_epilogue(rng, m, n, spec)
+    bm = max(m // 2, 1)                   # force >1 row tile when m > 1
+    got = bsr_matmul_pallas(x, bsr, bm=bm, epilogue=epi, interpret=True)
+    plain = bsr_matmul_pallas(x, bsr, bm=bm, interpret=True)
+    want = unfused(plain.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m", [1, 64])
+@pytest.mark.parametrize("spec", EPI_SPECS)
+def test_ref_epilogue_bitmatches_unfused(m, spec):
+    """The ref path's fused epilogue is bit-identical to the unfused fp32
+    composition — the serving guarantee that fusing changes no numerics."""
+    rng = np.random.default_rng(7 + m)
+    k, n = 192, 96
+    bsr, w, mask = _make_bsr(rng, k, n, 32, 32, 0.4, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    epi, unfused = _build_epilogue(rng, m, n, spec)
+    got = ref.bsr_matmul_ref(x, bsr, epilogue=epi)
+    want = unfused(ref.bsr_matmul_ref(x, bsr).astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_planes_epilogue_fused(mode):
+    """Fused epilogue through the plane-stack kernel and its ref — the MoE
+    expert path's act(gate) * up composition."""
+    rng = np.random.default_rng(11)
+    e, m, k, n = 3, 8, 128, 64
+    fused, dense = _make_planes(rng, e, k, n, 32, 32, [0.5, 0.0, 1.0])
+    x = jnp.asarray(rng.normal(size=(e, m, k)).astype(np.float32))
+    mult = jnp.asarray(rng.normal(size=(e, m, n)).astype(np.float32))
+    epi = Epilogue(multiplier=mult, activation="silu")
+    got = bsr_planes_matmul(x, fused, mode=mode, epilogue=epi)
+    plain = bsr_planes_matmul(x, fused, mode=mode).astype(jnp.float32)
+    want = jax.nn.silu(plain) * mult
+    tol = 0 if mode == "ref" else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_apply_epilogue_matches_kernel_order():
+    """apply_epilogue (the dense-fallback path) and the fused kernels use
+    the same op order: act(y + bias) * mult + res."""
+    rng = np.random.default_rng(13)
+    y = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    epi, unfused = _build_epilogue(rng, 4, 8, "bias+gelu+mult+res")
+    np.testing.assert_array_equal(
+        np.asarray(apply_epilogue(y, epi)), np.asarray(unfused(y)))
+    assert apply_epilogue(y, None) is y
