@@ -15,6 +15,7 @@ python -m pytest -q \
     tests/test_kernels.py \
     tests/test_sparse_exec.py \
     tests/test_serve_equiv.py \
+    tests/test_serving_engine.py \
     tests/test_models.py \
     tests/test_pruner.py \
     tests/test_system.py
@@ -35,6 +36,13 @@ python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
 python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
     --pruned 0.5 --prompt-len 4 --gen 8 \
     --temperature 0.8 --top-k 16 --top-p 0.95 --eos-id 2
+
+# continuous batching + paged KV pool (DESIGN.md §9): ragged prompts
+# arrive mid-stream, join decode slots freed by finished sequences, and
+# every stream is verified token-identical against its solo decode (the
+# command exits nonzero on any divergence)
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
+    --pruned 0.75 --prompt-len 12 --gen 8 --requests 5 --arrive-every 2
 
 # serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
 # (full default size on purpose — ~10s on CPU, and the committed numbers

@@ -278,7 +278,7 @@ def attention_decode(
     p: Dict,
     x: jnp.ndarray,                       # (B, 1, D)
     cache: Dict[str, jnp.ndarray],
-    cache_len: jnp.ndarray,               # scalar int32: #valid positions
+    cache_len: jnp.ndarray,               # scalar or (B,) int32: #valid positions
     *,
     num_heads: int,
     kv_heads: int,
@@ -288,19 +288,40 @@ def attention_decode(
     mrope_sections: Optional[Tuple[int, ...]] = None,
     use_rope: bool = True,
     update_cache: bool = True,
+    page_table: Optional[jnp.ndarray] = None,   # (B, max_pages) -> pool ids
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One-token decode over a (possibly seq-sharded) KV cache.
 
-    The new K/V is written at ``cache_len`` (dynamic_update_slice); scores
-    over invalid positions are masked.  With the cache's seq dim sharded
-    ("kv_seq"), GSPMD lowers the softmax to partial stats + all-reduce —
-    the flash-decode pattern.
+    ``cache_len`` may be a scalar (every row at the same position — the
+    fixed-batch hot path) or a ``(B,)`` vector (ragged prompts /
+    continuous batching): each row writes its new K/V at its own slot and
+    masks scores past its own length, so right-padded rows never attend
+    over garbage KV.
+
+    With ``page_table`` the cache is a *pool*: ``k``/``v`` are
+    ``(num_pages, page_size, K, dh)`` physical pages shared by all
+    sequences, and row ``b`` reads/writes the logical slots named by
+    ``page_table[b]`` (DESIGN.md §9).  The new token lands at page
+    ``cache_len // page_size``, offset ``cache_len % page_size`` of its
+    own table; the attention view is a pages gather reshaped back to one
+    logical sequence.  Ring (SWA) caches are not paged.
+
+    With the cache's seq dim sharded ("kv_seq"), GSPMD lowers the softmax
+    to partial stats + all-reduce — the flash-decode pattern.
     """
     b = x.shape[0]
-    max_len = cache["k"].shape[1]
-    ring = window is not None and max_len <= window  # SWA ring buffer
+    # normalize to a per-row length vector; scalar == every row equal
+    cache_len = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    paged = page_table is not None
+    if paged and (window is not None or not update_cache):
+        raise ValueError("paged KV caches do not support SWA/ring windows "
+                         "or cross-attention reads")
+    page_size = cache["k"].shape[1]
+    max_len = page_table.shape[1] * page_size if paged else cache["k"].shape[1]
+    ring = (not paged) and window is not None and max_len <= window
     q = _split_heads(dense(p["wq"], x), num_heads)          # (B,1,H,dh)
-    pos = jnp.broadcast_to(cache_len[None, None], (b, 1))
+    pos = cache_len[:, None]                                # (B, 1)
     if update_cache:
         write_pos = cache_len % max_len if ring else cache_len
         knew = _split_heads(dense(p["wk"], x), kv_heads)
@@ -312,33 +333,49 @@ def attention_decode(
         elif use_rope:
             q = apply_rope(q, pos, theta=rope_theta)
             knew = apply_rope(knew, pos, theta=rope_theta)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], knew.astype(cache["k"].dtype), (0, write_pos, 0, 0)
-        )
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], vnew.astype(cache["v"].dtype), (0, write_pos, 0, 0)
-        )
+        if paged:
+            # physical slot of this row's next token: its own page table
+            # entry at logical page cache_len // page_size
+            pid = jnp.take_along_axis(
+                page_table, (cache_len // page_size)[:, None], axis=1)[:, 0]
+            off = cache_len % page_size
+            ck = cache["k"].at[pid, off].set(
+                knew[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[pid, off].set(
+                vnew[:, 0].astype(cache["v"].dtype))
+        else:
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, write_pos].set(
+                knew[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, write_pos].set(
+                vnew[:, 0].astype(cache["v"].dtype))
         cache = {"k": ck, "v": cv}
     else:  # cross-attention: cache holds encoder K/V, no rope on q
         pass
-    ck = logical_constraint(cache["k"], "batch", "kv_seq", "kv", None)
-    cv = logical_constraint(cache["v"], "batch", "kv_seq", "kv", None)
+    if paged:
+        # pages gather: (B, max_pages, page, K, dh) -> (B, S_logical, K, dh)
+        ck = cache["k"][page_table].reshape(b, max_len, kv_heads, head_dim)
+        cv = cache["v"][page_table].reshape(b, max_len, kv_heads, head_dim)
+    else:
+        ck = logical_constraint(cache["k"], "batch", "kv_seq", "kv", None)
+        cv = logical_constraint(cache["v"], "batch", "kv_seq", "kv", None)
 
     g = num_heads // kv_heads
     qg = q.reshape(b, 1, kv_heads, g, head_dim)
     scores = _gqa_scores(qg, ck) / math.sqrt(head_dim)      # (B,K,G,1,S)
-    kpos = jnp.arange(ck.shape[1])
+    kpos = jnp.arange(ck.shape[1])[None, :]                 # (1, S)
+    clen = cache_len[:, None]                               # (B, 1)
     if not update_cache:
-        valid = kpos < cache_len                    # cross-attn: encoder len
+        valid = kpos < clen                         # cross-attn: encoder len
     elif ring:
         # ring slots hold the last min(cache_len+1, max_len) tokens — all
         # valid once full; before that, only slots [0, cache_len]
-        valid = kpos <= cache_len
+        valid = kpos <= clen
     else:
-        valid = kpos <= cache_len
+        valid = kpos <= clen
         if window is not None:
-            valid &= kpos > cache_len - window
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+            valid &= kpos > clen - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     o = _gqa_values(w, cv).astype(x.dtype)                  # (B,1,K,G,dh)
     o = dense(p["wo"], o.reshape(b, 1, num_heads * head_dim))

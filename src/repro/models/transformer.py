@@ -438,9 +438,15 @@ def lm_decode(
     cache_len: jnp.ndarray,
     cfg: ModelConfig,
 ) -> Tuple[jnp.ndarray, List[Dict]]:
-    """One-token decode. batch["tokens"] (B, 1). Returns (logits, caches)."""
+    """One-token decode. batch["tokens"] (B, 1). Returns (logits, caches).
+
+    ``cache_len`` is a scalar or per-row ``(B,)`` vector (ragged prompts).
+    With ``batch["page_tables"]`` (B, max_pages) the attention caches are
+    page pools — ``(num_pages, page_size, K, dh)`` — and every self-attn
+    layer reads/writes through the tables (DESIGN.md §9)."""
     tokens = batch["tokens"]
     b = tokens.shape[0]
+    page_tables = batch.get("page_tables")
     x = embed_lookup(params["embed"], tokens, dtype=cfg.adtype)
     x = logical_constraint(x, "batch", None, "embed")
 
@@ -458,7 +464,7 @@ def lm_decode(
                 num_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
                 head_dim=cfg.head_dim_(), window=cfg.window,
                 rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
-                use_rope=spec.use_rope,
+                use_rope=spec.use_rope, page_table=page_tables,
             )
             cache = {**cache, **cache2}
             if spec.cross_attn:
@@ -606,14 +612,21 @@ def lm_prefill(
 def _nucleus_filter(logits: jnp.ndarray, top_p: float) -> jnp.ndarray:
     """Top-p (nucleus) mask: keep the smallest prefix of the
     probability-sorted vocab whose mass reaches ``top_p`` (always at
-    least the top-1 token); everything else goes to -inf."""
-    srt = jnp.sort(logits, axis=-1)[..., ::-1]              # descending
+    least the top-1 token); everything else goes to -inf.
+
+    The keep set is decided *positionally* in sorted order and scattered
+    back through the inverse permutation — comparing against the
+    threshold logit value would keep every token tied at the threshold,
+    letting the kept mass blow well past ``top_p`` on tied logits.  Ties
+    break by sorted position (stable sort: lowest vocab id first)."""
+    order = jnp.argsort(-logits, axis=-1)                   # descending, stable
+    srt = jnp.take_along_axis(logits, order, axis=-1)
     probs = jax.nn.softmax(srt, axis=-1)
-    # a token stays if the mass strictly *before* it is < top_p
-    keep = (jnp.cumsum(probs, axis=-1) - probs) < top_p     # (.., V) sorted
-    kth = jnp.sum(keep, axis=-1, keepdims=True)             # #kept >= 1
-    thresh = jnp.take_along_axis(srt, kth - 1, axis=-1)
-    return jnp.where(logits < thresh, -jnp.inf, logits)
+    # a token stays if the mass strictly *before* it is < top_p (>=1 kept)
+    keep_sorted = (jnp.cumsum(probs, axis=-1) - probs) < top_p
+    inv = jnp.argsort(order, axis=-1)                       # undo the sort
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return jnp.where(keep, logits, -jnp.inf)
 
 
 def _select_token(
@@ -630,8 +643,11 @@ def _select_token(
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), rng
     lg = logits.astype(jnp.float32) / temperature
     if top_k is not None and 0 < top_k < lg.shape[-1]:
-        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
-        lg = jnp.where(lg < kth, -jnp.inf, lg)
+        # positional keep set, like _nucleus_filter: comparing against the
+        # k-th *value* would keep every logit tied at it (>> k tokens on a
+        # tie plateau); ranks break ties by vocab id (stable sort)
+        ranks = jnp.argsort(jnp.argsort(-lg, axis=-1), axis=-1)
+        lg = jnp.where(ranks < top_k, lg, -jnp.inf)
     if top_p is not None and top_p < 1.0:
         lg = _nucleus_filter(lg, top_p)
     rng, sub = jax.random.split(rng)
@@ -642,7 +658,7 @@ def lm_generate(
     params: Dict,
     caches: List[Dict],
     first_token: jnp.ndarray,       # (B, 1) int32 — usually argmax of prefill
-    start_len: jnp.ndarray,         # scalar int32: tokens already in cache
+    start_len: jnp.ndarray,         # scalar or (B,) int32: tokens in cache
     num_tokens: int,                # static: tokens to emit
     cfg: ModelConfig,
     *,
@@ -662,6 +678,11 @@ def lm_generate(
     and once every row is done the decode step body is skipped via
     ``lax.cond`` (the carry passes through untouched) — early exit without
     a single host sync.
+
+    ``start_len`` may be per-row ``(B,)`` for ragged (right-padded)
+    prompts: each row continues from its own prompt length — rope
+    positions, cache writes and attention masks all stay per-row, so no
+    row ever attends over another row's padding slots.
 
     Emits the running token *before* each decode step (so
     ``tokens[:, 0] == first_token``), matching the per-token serve loop it

@@ -1,0 +1,13 @@
+"""Request-level serving: paged KV caches + continuous batching.
+
+See DESIGN.md §9.  The static fixed-batch hot path stays in
+``repro.models`` (``lm_prefill`` / ``lm_generate``); this package adds
+the orchestration layer for streamed request arrival: a page-pool
+allocator, a FIFO admission scheduler, and the engine whose decode step
+threads per-row ``cache_len`` and page tables through ``lm_decode``.
+"""
+from .engine import ServingEngine
+from .pages import NULL_PAGE, PagePool
+from .scheduler import Request, Scheduler
+
+__all__ = ["ServingEngine", "PagePool", "NULL_PAGE", "Request", "Scheduler"]

@@ -1,0 +1,297 @@
+"""Continuous-batching serving engine over paged KV caches.
+
+The engine owns a fixed number of *decode slots* (rows of the jitted
+decode step) and one page pool per attention layer (DESIGN.md §9).  Its
+host loop interleaves three things per tick:
+
+1. **admission** — the FIFO scheduler hands over requests whose whole
+   token budget fits in the pool; each gets a free slot, freshly
+   allocated pages, and a *prefill-on-join*: one jitted ``lm_prefill``
+   over its (unpadded) prompt, whose KV is copied page-by-page into the
+   pool and whose recurrent states (mamba/xLSTM) are written into the
+   slot row.  The first token is the prefill argmax — identical to the
+   static hot path in ``launch/serve.py``.
+2. **decode** — ONE jitted ``lm_decode`` step for all slots: per-row
+   ``cache_len`` masks, per-row page-table reads/writes.  Free slots ride
+   along pointing at the null page; their outputs are discarded.
+3. **retirement** — rows that hit EOS or their budget give their pages
+   back to the pool, freeing the slot for the next admission.
+
+Because every row's attention is masked to its own ``[0, cache_len)``
+and its pages are exclusively owned, a sequence that joins mid-stream
+computes exactly what it would compute decoded alone — the token-identity
+property ``tests/test_serving_engine.py`` pins down for dense and
+packed-BSR params.  Sampling (temperature/top-k/top-p) uses a *per-slot*
+PRNG key seeded from the request id, so sampled streams are also
+independent of co-batching.  MoE archs run but route tokens jointly
+across the batch, so only greedy dense/attention stacks carry the
+bit-identity guarantee.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_caches, layer_specs, lm_decode, lm_prefill
+from repro.models.transformer import _select_token
+
+from .pages import NULL_PAGE, PagePool
+from .scheduler import Request, Scheduler
+
+__all__ = ["ServingEngine"]
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    pages: List[int]
+    emitted: List[int]
+
+
+# Module-level jitted steps with a *static* cfg (ModelConfig is a frozen,
+# hashable dataclass): every ServingEngine instance in the process shares
+# one compilation cache per (cfg, shapes) — a warm-up engine really warms
+# the engine being measured.
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_step(params, tokens, *, cfg):
+    """Prefill-on-join: one cache-filling pass over a (1, L) prompt."""
+    caches = init_caches(cfg, 1, tokens.shape[1], jnp.float32)
+    logits, caches = lm_prefill(params, caches, {"tokens": tokens}, cfg)
+    first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return first, caches
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("caches",))
+def _insert_step(caches, row_caches, page_ids, slot, *, cfg):
+    """Copy a prefilled single-row cache into the pool: whole KV pages
+    for attention layers, slot rows for recurrent (SSM/xLSTM) state."""
+    n = page_ids.shape[0]
+    out = []
+    for spec, pool, rc in zip(layer_specs(cfg), caches, row_caches):
+        if spec.mixer == "attn":
+            ps = pool["k"].shape[1]
+            upd = {}
+            for key in ("k", "v"):
+                kv = rc[key][0]                             # (L, K, dh)
+                pad = n * ps - kv.shape[0]
+                kv = jnp.pad(kv, ((0, pad), (0, 0), (0, 0)))
+                kv = kv.reshape(n, ps, *kv.shape[1:])
+                upd[key] = pool[key].at[page_ids].set(
+                    kv.astype(pool[key].dtype))
+            out.append(upd)
+        elif rc:
+            out.append(jax.tree_util.tree_map(
+                lambda P, r: P.at[slot].set(r[0].astype(P.dtype)),
+                pool, rc))
+        else:
+            out.append(pool)
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "temperature", "top_k", "top_p"),
+    donate_argnames=("caches",))
+def _decode_step(params, caches, tok, cache_len, tables, rngs, *,
+                 cfg, temperature, top_k, top_p):
+    """One batched decode tick: per-row cache_len + page-table masks."""
+    logits, caches = lm_decode(
+        params, caches, {"tokens": tok, "page_tables": tables},
+        cache_len, cfg)
+    lg = logits[:, -1].astype(jnp.float32)
+    if temperature and temperature > 0.0:
+        # per-slot keys -> each row's sample stream ignores its co-batch
+        # (join-invariant sampling)
+        def row(l, k):
+            t, k = _select_token(l[None], k, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
+            return t[0], k
+        nxt, rngs = jax.vmap(row)(lg, rngs)
+    else:
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return nxt, caches, rngs
+
+
+class ServingEngine:
+    """Request-level serving: paged KV pool + continuous batching.
+
+    Parameters
+    ----------
+    params : dense or BSR-packed model pytree (both serve identically
+        through the ``layers.matmul`` dispatch).
+    cfg : model config.  Paged caches do not support SWA ring windows or
+        encoder-decoder (whisper) stacks.
+    num_slots : decode-batch rows; the jitted step shape never changes.
+    page_size : tokens per physical KV page.
+    max_seq_len : longest prompt+generation budget a request may hold;
+        fixes the page-table width.
+    num_pages : physical pages per layer pool (page 0 is the null page).
+        Defaults to every slot holding a full-length sequence.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        *,
+        num_slots: int = 4,
+        page_size: int = 8,
+        max_seq_len: int = 64,
+        num_pages: Optional[int] = None,
+        temperature: float = 0.0,
+        top_k: Optional[int] = None,
+        top_p: Optional[float] = None,
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+    ):
+        if cfg.window is not None:
+            raise ValueError("paged KV caches do not support SWA windows")
+        if cfg.enc_layers:
+            raise ValueError("encoder-decoder archs are not paged-servable")
+        self.params, self.cfg = params, cfg
+        self.num_slots = num_slots
+        self.max_pages = -(-max_seq_len // page_size)
+        if num_pages is None:
+            num_pages = num_slots * self.max_pages + 1
+        self.pool = PagePool(num_pages, page_size)
+        self.scheduler = Scheduler(self.pool)
+        self.temperature, self.top_k, self.top_p = temperature, top_k, top_p
+        self.eos_id = eos_id
+        self._base_key = jax.random.PRNGKey(seed)
+        self._specs = layer_specs(cfg)
+
+        # device state: page-pool caches per layer; recurrent mixers keep
+        # ordinary per-slot rows (their state is O(1) per sequence)
+        kvh, hd = cfg.kv_heads, cfg.head_dim_()
+        self.caches = []
+        for spec, c in zip(self._specs, init_caches(cfg, num_slots, 1,
+                                                    jnp.float32)):
+            if spec.mixer == "attn":
+                c = {"k": jnp.zeros((num_pages, page_size, kvh, hd),
+                                    jnp.float32),
+                     "v": jnp.zeros((num_pages, page_size, kvh, hd),
+                                    jnp.float32)}
+            self.caches.append(c)
+
+        # host-mirrored per-slot state, pushed to device every tick
+        self._tok = np.zeros((num_slots, 1), np.int32)
+        self._cache_len = np.zeros((num_slots,), np.int32)
+        self._tables = np.full((num_slots, self.max_pages), NULL_PAGE,
+                               np.int32)
+        self._rngs = np.zeros((num_slots, 2), np.uint32)
+        self.slots: List[Optional[_Slot]] = [None] * num_slots
+        self.tick = 0
+        self._next_rid = 0
+        self.active_slot_ticks = 0
+        self.decode_ticks = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt, max_new: int, arrival: int = 0) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      arrival=arrival)
+        if max_new < 1 or prompt.size < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        if self.pool.pages_for(req.budget_tokens) > self.max_pages:
+            raise ValueError(
+                f"request needs {req.budget_tokens} tokens > "
+                f"max_seq_len {self.max_pages * self.pool.page_size}")
+        self._next_rid += 1
+        self.scheduler.submit(req)
+        return req.rid
+
+    # -- engine loop -------------------------------------------------------
+
+    def _admit(self) -> int:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admitted = self.scheduler.admit(self.tick, len(free))
+        for req in admitted:
+            slot = free.pop(0)
+            pages = self.pool.alloc(req.budget_tokens)
+            first, row_caches = _prefill_step(
+                self.params, jnp.asarray(req.prompt[None]), cfg=self.cfg)
+            self.caches = _insert_step(
+                self.caches, row_caches,
+                jnp.asarray(pages, jnp.int32), jnp.asarray(slot, jnp.int32),
+                cfg=self.cfg)
+            self._tables[slot] = NULL_PAGE
+            self._tables[slot, :len(pages)] = pages
+            self._cache_len[slot] = req.prompt_len
+            tok = int(first[0])
+            self._tok[slot, 0] = tok
+            self._rngs[slot] = np.asarray(
+                jax.random.fold_in(self._base_key, req.rid), np.uint32)
+            req.admitted_at = self.tick
+            self.slots[slot] = _Slot(req=req, pages=pages, emitted=[tok])
+            self._maybe_finish(slot)
+        return len(admitted)
+
+    def _maybe_finish(self, slot: int) -> None:
+        s = self.slots[slot]
+        if s is None:
+            return
+        if (len(s.emitted) >= s.req.max_new
+                or (self.eos_id is not None
+                    and s.emitted[-1] == self.eos_id)):
+            s.req.tokens = np.asarray(s.emitted, np.int32)
+            self.slots[slot] = None
+            self._tables[slot] = NULL_PAGE
+            self._cache_len[slot] = 0
+            self._tok[slot, 0] = 0
+            self.scheduler.retire(s.req, s.pages, self.tick)
+
+    def step(self) -> int:
+        """One engine tick: admit, then one batched decode step.  Returns
+        the number of requests admitted this tick."""
+        admitted = self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            nxt, self.caches, rngs = _decode_step(
+                self.params, self.caches, jnp.asarray(self._tok),
+                jnp.asarray(self._cache_len), jnp.asarray(self._tables),
+                jnp.asarray(self._rngs), cfg=self.cfg,
+                temperature=self.temperature, top_k=self.top_k,
+                top_p=self.top_p)
+            nxt = np.asarray(nxt)
+            self._rngs = np.array(rngs)   # copy: host mirror stays writable
+            for i in active:
+                self._cache_len[i] += 1
+                self._tok[i, 0] = int(nxt[i])
+                self.slots[i].emitted.append(int(nxt[i]))
+                self._maybe_finish(i)
+            self.active_slot_ticks += len(active)
+            self.decode_ticks += 1
+        self.tick += 1
+        return admitted
+
+    def run(self, max_ticks: int = 100_000) -> Dict[int, Request]:
+        """Drive ticks until every submitted request has finished."""
+        while self.scheduler.pending or any(s is not None for s in self.slots):
+            if self.tick >= max_ticks:
+                raise RuntimeError(f"engine stalled after {max_ticks} ticks")
+            # a tick that starts fully idle with a due request and admits
+            # nothing can never make progress (no pages will ever free)
+            idle = all(s is None for s in self.slots)
+            due = (self.scheduler.pending
+                   and self.scheduler.waiting[0].arrival <= self.tick)
+            admitted = self.step()
+            if idle and due and not admitted:
+                raise RuntimeError(
+                    "admission stalled: head request cannot fit "
+                    f"({self.scheduler.waiting[0].budget_tokens} tokens) "
+                    f"with {self.pool.free_pages} free pages")
+        return {r.rid: r for r in self.scheduler.finished}
+
+    @property
+    def slot_utilization(self) -> float:
+        if not self.decode_ticks:
+            return 0.0
+        return self.active_slot_ticks / (self.decode_ticks * self.num_slots)

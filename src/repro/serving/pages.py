@@ -1,0 +1,72 @@
+"""Paged KV-cache pool: fixed-size pages + per-sequence page tables.
+
+The physical cache for every attention layer is one pool array
+``(num_pages, page_size, kv_heads, head_dim)`` shared by all sequences;
+a sequence owns an ordered list of page ids (its *page table*) and its
+logical positions ``[0, cache_len)`` live at
+``pool[table[t // page_size], t % page_size]``.  The pool is the device
+side; ``PagePool`` here is the host-side allocator that hands pages to
+sequences as they join and reclaims them as they finish (DESIGN.md §9).
+
+Page id 0 is reserved as the *null page*: free decode slots point their
+whole table at it, so their (discarded) decode writes land in a scratch
+page instead of corrupting a live sequence.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+__all__ = ["NULL_PAGE", "PagePool"]
+
+NULL_PAGE = 0
+
+
+class PagePool:
+    """Free-list allocator over ``num_pages`` fixed-size pages.
+
+    Pages are recycled LIFO — a page freed by a finished sequence is the
+    next one handed out, keeping the working set of the physical pool as
+    small as the live traffic allows.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list; page 0 (null) is never handed out
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_for(self, num_tokens: int) -> int:
+        """Pages needed to hold ``num_tokens`` cache slots."""
+        return max(1, -(-num_tokens // self.page_size))
+
+    def can_alloc(self, num_tokens: int) -> bool:
+        return self.pages_for(num_tokens) <= len(self._free)
+
+    def alloc(self, num_tokens: int) -> List[int]:
+        """Claim pages for ``num_tokens`` slots; raises if the pool can't
+        cover the request (callers gate on :meth:`can_alloc` first)."""
+        n = self.pages_for(num_tokens)
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for pid in pages:
+            if pid == NULL_PAGE:
+                raise ValueError("cannot free the null page")
+            if pid in self._free or not (0 < pid < self.num_pages):
+                raise ValueError(f"double/invalid free of page {pid}")
+            self._free.append(pid)

@@ -1,0 +1,89 @@
+"""Continuous-batching scheduler: FIFO admission gated on slots + pages.
+
+Requests queue in arrival order; at every engine tick the scheduler
+admits from the head of the queue while (i) a decode slot is free and
+(ii) the page pool can cover the request's *whole* budget —
+``prompt_len + max_new`` tokens — up front.  Reserving the full budget
+at admission is the eviction-freedom invariant: an admitted sequence can
+always run to its last token without preemption, so mid-stream joins are
+token-identical to solo decodes (DESIGN.md §9).  Head-of-line blocking
+is deliberate — skipping ahead to smaller requests would starve long
+prompts under sustained load.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+from .pages import PagePool
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request in the stream."""
+    rid: int
+    prompt: np.ndarray            # (L,) int32 prompt tokens
+    max_new: int                  # generation budget (incl. first token)
+    arrival: int = 0              # earliest engine tick it may be admitted
+    # filled by the engine:
+    tokens: Optional[np.ndarray] = None   # emitted tokens, set on finish
+    admitted_at: Optional[int] = None
+    finished_at: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def budget_tokens(self) -> int:
+        """Cache slots the request needs end-to-end: the prompt plus every
+        generated token except the last (whose KV is written but never
+        attended — kept for simplicity)."""
+        return self.prompt_len + self.max_new
+
+
+class Scheduler:
+    """FIFO queue + admission policy over a :class:`PagePool`."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.waiting: Deque[Request] = deque()
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        # keep the queue in (arrival, submit-order) order: an early-arrival
+        # request submitted late must not sit behind an unarrived head
+        # (admit() only ever pops the head)
+        self.waiting.append(req)
+        self.waiting = deque(sorted(self.waiting, key=lambda r: r.arrival))
+
+    def admit(self, tick: int, free_slots: int) -> List[Request]:
+        """Pop admissible head-of-queue requests for this tick: arrived,
+        a slot free, and the pool able to reserve the full token budget."""
+        out: List[Request] = []
+        reserved = 0   # pages already committed to this tick's admissions
+        while self.waiting and free_slots > 0:
+            head = self.waiting[0]
+            if head.arrival > tick:
+                break
+            need = self.pool.pages_for(head.budget_tokens)
+            if reserved + need > self.pool.free_pages:
+                break  # head-of-line blocks until pages free up
+            reserved += need
+            out.append(self.waiting.popleft())
+            free_slots -= 1
+        return out
+
+    def retire(self, req: Request, pages: Sequence[int], tick: int) -> None:
+        req.finished_at = tick
+        self.pool.free(pages)
+        self.finished.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.waiting)

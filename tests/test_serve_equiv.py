@@ -148,6 +148,42 @@ def test_slstm_scan_equals_decode():
     np.testing.assert_allclose(np.asarray(y_inc), np.asarray(y_full), atol=1e-4)
 
 
+def test_ragged_cache_len_vector_matches_straight_through():
+    """Per-row (B,) cache_len: ragged prompts batched together decode the
+    same tokens each row would decode straight through on its own — the
+    scalar-start_len bug made short rows attend over garbage KV slots."""
+    from repro.models import lm_generate
+
+    cfg = make_smoke(get_config("qwen1.5-0.5b"), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens, gen = [3, 7, 5], 6
+    max_len = max(lens) + gen
+    prompts = [
+        jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                           (1, l), 0, cfg.vocab)
+        for i, l in enumerate(lens)
+    ]
+
+    # per-row straight-through reference: each sequence alone (b=1)
+    want, firsts, row_caches = [], [], []
+    for p, l in zip(prompts, lens):
+        caches = init_caches(cfg, 1, max_len, jnp.float32)
+        logits, caches = lm_prefill(params, caches, {"tokens": p}, cfg)
+        first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks, _ = lm_generate(params, caches, first,
+                              jnp.asarray(l, jnp.int32), gen, cfg)
+        want.append(np.asarray(toks)[0])
+        firsts.append(first)
+        row_caches.append(caches)
+
+    # one ragged batch: per-row prefilled caches stacked, (B,) lengths
+    batched = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *row_caches)
+    got, _ = lm_generate(params, batched, jnp.concatenate(firsts, axis=0),
+                         jnp.asarray(lens, jnp.int32), gen, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.stack(want))
+
+
 def test_swa_ring_buffer_decode():
     """SWA cache smaller than the sequence: ring writes stay correct."""
     cfg = make_smoke(get_config("mixtral-8x7b"), window=8, capacity_factor=8.0)

@@ -1,0 +1,207 @@
+"""Continuous batching + paged KV caches (DESIGN.md §9).
+
+The load-bearing property: a sequence that joins the engine mid-stream —
+sharing its decode batch with strangers, its KV scattered over pool
+pages — must emit exactly the tokens it would emit decoded alone, for
+dense AND packed-BSR params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_smoke
+from repro.core import BlockingSpec
+from repro.models import init_caches, init_params, lm_generate, lm_prefill
+from repro.models.attention import attention_decode, attention_init
+from repro.serving import NULL_PAGE, PagePool, Request, Scheduler, ServingEngine
+from repro.sparse import knapsack_prune, pack_params
+
+
+# ---------------------------------------------------------------------------
+# PagePool / Scheduler units
+# ---------------------------------------------------------------------------
+
+def test_page_pool_alloc_free_recycle():
+    pool = PagePool(num_pages=6, page_size=4)
+    assert pool.free_pages == 5            # page 0 reserved (null)
+    a = pool.alloc(10)                     # ceil(10/4) = 3 pages
+    assert len(a) == 3 and NULL_PAGE not in a
+    assert pool.used_pages == 3
+    b = pool.alloc(4)
+    assert len(b) == 1 and set(a).isdisjoint(b)
+    assert not pool.can_alloc(8)           # 1 page left, need 2
+    pool.free(a)
+    assert pool.can_alloc(8)
+    c = pool.alloc(8)                      # LIFO: freed pages come back
+    assert set(c) <= set(a)
+    with pytest.raises(ValueError):
+        pool.free([NULL_PAGE])
+    with pytest.raises(ValueError):
+        pool.free([b[0], b[0]])            # double free
+
+
+def test_scheduler_fifo_admission_and_head_of_line():
+    pool = PagePool(num_pages=5, page_size=4)    # 4 usable pages
+    sched = Scheduler(pool)
+    big = Request(rid=0, prompt=np.zeros(10, np.int32), max_new=6)   # 4 pages
+    small = Request(rid=1, prompt=np.zeros(2, np.int32), max_new=2)  # 1 page
+    late = Request(rid=2, prompt=np.zeros(2, np.int32), max_new=2,
+                   arrival=5)
+    sched.submit(big), sched.submit(small), sched.submit(late)
+
+    got = sched.admit(tick=0, free_slots=4)
+    assert [r.rid for r in got] == [0]     # big takes the whole pool
+    pages = pool.alloc(big.budget_tokens)
+    # head-of-line: small would fit zero pages now; late hasn't arrived
+    assert sched.admit(tick=0, free_slots=3) == []
+    sched.retire(big, pages, tick=3)
+    got = sched.admit(tick=3, free_slots=3)
+    assert [r.rid for r in got] == [1]     # FIFO order, late still future
+    pool.alloc(small.budget_tokens)
+    assert [r.rid for r in sched.admit(tick=5, free_slots=2)] == [2]
+
+
+def test_scheduler_orders_queue_by_arrival_not_submit_order():
+    """An early-arrival request submitted late must not wait behind an
+    unarrived head — the queue keeps (arrival, submit) order."""
+    pool = PagePool(num_pages=5, page_size=4)
+    sched = Scheduler(pool)
+    sched.submit(Request(rid=0, prompt=np.zeros(2, np.int32), max_new=2,
+                         arrival=100))
+    sched.submit(Request(rid=1, prompt=np.zeros(2, np.int32), max_new=2,
+                         arrival=0))
+    assert [r.rid for r in sched.admit(tick=0, free_slots=2)] == [1]
+
+
+# ---------------------------------------------------------------------------
+# Paged attention_decode == contiguous attention_decode
+# ---------------------------------------------------------------------------
+
+def test_attention_decode_paged_matches_contiguous():
+    """Same KV scattered over pool pages (in shuffled physical order)
+    must attend identically to the contiguous cache, per row."""
+    b, ps, npages_seq, kvh, h, dh, d = 2, 4, 3, 2, 4, 16, 64
+    max_len = ps * npages_seq
+    key = jax.random.PRNGKey(0)
+    p = attention_init(key, d, h, kvh, dh)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, 1, d))
+    k0 = jax.random.normal(jax.random.fold_in(key, 2), (b, max_len, kvh, dh))
+    v0 = jax.random.normal(jax.random.fold_in(key, 3), (b, max_len, kvh, dh))
+    cache_len = jnp.asarray([5, 9], jnp.int32)
+
+    out_c, cc = attention_decode(
+        p, x, {"k": k0, "v": v0}, cache_len,
+        num_heads=h, kv_heads=kvh, head_dim=dh)
+
+    # pool: rows own disjoint, deliberately non-contiguous page ids
+    tables = jnp.asarray([[3, 1, 5], [2, 6, 4]], jnp.int32)
+    pool_k = jnp.zeros((7, ps, kvh, dh))
+    pool_v = jnp.zeros((7, ps, kvh, dh))
+    for r in range(b):
+        for j in range(npages_seq):
+            pool_k = pool_k.at[tables[r, j]].set(k0[r, j * ps:(j + 1) * ps])
+            pool_v = pool_v.at[tables[r, j]].set(v0[r, j * ps:(j + 1) * ps])
+
+    out_p, cp = attention_decode(
+        p, x, {"k": pool_k, "v": pool_v}, cache_len,
+        num_heads=h, kv_heads=kvh, head_dim=dh, page_table=tables)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_c),
+                               atol=1e-6)
+    # the write landed in the right physical slot of each row's own page
+    for r, L in enumerate([5, 9]):
+        want = cc["k"][r, L]
+        got = cp["k"][tables[r, L // ps], L % ps]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6)
+
+
+def test_attention_decode_paged_rejects_windows():
+    p = attention_init(jax.random.PRNGKey(0), 32, 2, 2, 16)
+    x = jnp.zeros((1, 1, 32))
+    cache = {"k": jnp.zeros((4, 2, 2, 16)), "v": jnp.zeros((4, 2, 2, 16))}
+    with pytest.raises(ValueError):
+        attention_decode(p, x, cache, jnp.zeros((1,), jnp.int32),
+                         num_heads=2, kv_heads=2, head_dim=16, window=8,
+                         page_table=jnp.zeros((1, 2), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Engine: mid-stream joins token-identical to solo decode
+# ---------------------------------------------------------------------------
+
+def _smoke_pair(arch="qwen1.5-0.5b", *, sparsity=0.5):
+    cfg = make_smoke(get_config(arch), n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sel = knapsack_prune(params, sparsity=sparsity,
+                         blocking=BlockingSpec(bk=32, bn=32), min_size=1024)
+    packed = pack_params(params, sel.masks, sel.structures)
+    return cfg, params, packed
+
+
+def _solo(cfg, params, prompt, gen, eos_id=None):
+    toks = jnp.asarray(prompt[None])
+    caches = init_caches(cfg, 1, toks.shape[1] + gen, jnp.float32)
+    logits, caches = lm_prefill(params, caches, {"tokens": toks}, cfg)
+    first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out, _ = lm_generate(params, caches, first,
+                         jnp.asarray(toks.shape[1], jnp.int32), gen, cfg,
+                         eos_id=eos_id)
+    return np.asarray(out)[0]
+
+
+def test_engine_midstream_join_token_identical_dense_and_packed():
+    cfg, dense, packed = _smoke_pair()
+    rng = np.random.default_rng(0)
+    lens, gens = [5, 9, 7, 5], [6, 4, 6, 5]
+    arrivals = [0, 0, 3, 5]            # requests 2/3 join mid-stream
+    prompts = [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+               for l in lens]
+    for name, params in (("dense", dense), ("packed", packed)):
+        eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                            max_seq_len=16)
+        for p, g, a in zip(prompts, gens, arrivals):
+            eng.submit(p, g, arrival=a)
+        done = eng.run()
+        assert len(done) == len(prompts)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            assert done[i].admitted_at >= arrivals[i]
+            np.testing.assert_array_equal(
+                done[i].tokens, _solo(cfg, params, p, g),
+                err_msg=f"{name}/request {i}")
+        # joins really were interleaved: some request admitted after
+        # another had already started decoding
+        assert max(r.admitted_at for r in done.values()) > 0
+        assert eng.pool.free_pages == eng.pool.num_pages - 1  # all freed
+
+
+def test_engine_eos_retires_slot_and_readmits():
+    """EOS ends a stream early, frees its pages, and the freed slot picks
+    up the next queued request; tokens still match the solo decode."""
+    cfg, dense, _ = _smoke_pair()
+    rng = np.random.default_rng(1)
+    p0 = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    base = _solo(cfg, dense, p0, 6)
+    eos = int(base[2])                 # a token p0 emits mid-stream
+    eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, eos_id=eos)
+    eng.submit(p0, 6)
+    eng.submit(p1, 3)                  # must wait for the only slot
+    done = eng.run()
+    want0 = _solo(cfg, dense, p0, 6, eos_id=eos)
+    stop = int(np.argmax(want0 == eos)) + 1 if (want0 == eos).any() else 6
+    np.testing.assert_array_equal(done[0].tokens, want0[:stop])
+    assert done[0].tokens[-1] == eos and len(done[0].tokens) < 6
+    np.testing.assert_array_equal(done[1].tokens,
+                                  _solo(cfg, dense, p1, 3, eos_id=eos))
+    assert done[1].admitted_at >= done[0].finished_at
+
+
+def test_engine_stalls_loudly_when_pool_too_small():
+    cfg, dense, _ = _smoke_pair()
+    eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, num_pages=2)   # 1 usable page
+    eng.submit(np.zeros(6, np.int32), 4)               # needs 3 pages
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()

@@ -387,6 +387,52 @@ def test_generate_topk1_and_tiny_topp_equal_greedy():
                                       err_msg=str(kw))
 
 
+def test_nucleus_filter_breaks_ties_by_sorted_position():
+    """Regression: the old value-threshold nucleus kept EVERY logit tied
+    at the cutoff, so tied logits could keep far more than top_p mass.
+    Ties must break by sorted position (stable: lowest vocab id first)."""
+    from repro.models.transformer import _nucleus_filter
+
+    # 8-way tie, top_p=0.5: exactly 4 survive (old code kept all 8)
+    out = np.asarray(_nucleus_filter(jnp.zeros((1, 8)), 0.5))[0]
+    kept = np.isfinite(out)
+    assert kept.sum() == 4
+    assert kept[:4].all() and not kept[4:].any()
+
+    # the top-1 token always survives, even a vanishing nucleus
+    out = np.asarray(_nucleus_filter(jnp.zeros((1, 4)), 1e-9))[0]
+    assert np.isfinite(out).sum() == 1
+
+    # distinct logits: minimal prefix whose mass reaches top_p, and the
+    # kept entries pass through unchanged
+    logits = jnp.log(jnp.asarray([[0.4, 0.3, 0.2, 0.1]]))
+    out = np.asarray(_nucleus_filter(logits, 0.6))[0]
+    np.testing.assert_allclose(out[:2], np.asarray(logits)[0, :2])
+    assert not np.isfinite(out[2:]).any()
+
+    # tied tail straddling the cutoff: mass before each of the four tied
+    # 0.15-tokens is 0.4, 0.55, 0.70, ... -> exactly two of them stay
+    logits = jnp.log(jnp.asarray([[0.4, 0.15, 0.15, 0.15, 0.15]]))
+    out = np.asarray(_nucleus_filter(logits, 0.7))[0]
+    assert np.isfinite(out).sum() == 3      # 0.4 + two tied tokens
+    assert np.isfinite(out[:3]).all()       # stable: lowest ids first
+
+
+def test_topk_filter_breaks_ties_by_rank():
+    """Same tie-class bug as the nucleus filter: top_k=K on a tie plateau
+    must expose exactly K tokens to the sampler, not every tied logit."""
+    from repro.models.transformer import _select_token
+
+    logits = jnp.zeros((1, 6))             # 6-way tie
+    seen = set()
+    for s in range(24):
+        t, _ = _select_token(logits, jax.random.PRNGKey(s),
+                             temperature=1.0, top_k=2, top_p=None)
+        seen.add(int(t[0]))
+    assert seen <= {0, 1}                  # stable: lowest vocab ids kept
+    assert len(seen) == 2                  # and both really are sampled
+
+
 def test_generate_sampling_deterministic_and_in_vocab():
     cfg, _, packed = _pruned_pair("qwen1.5-0.5b")
     caches = init_caches(cfg, 2, 10, jnp.float32)
