@@ -96,9 +96,12 @@ def bench_serving(
         return {"prefill_ms": t_prefill * 1e3,
                 "tok_s": gen * batch / t_decode}
 
-    def run_stream(p, *, requests=8, arrive_every=2, page_size=8):
+    def run_stream(p, *, requests=8, arrive_every=2, page_size=8,
+                   ticks_per_sync=1):
         """Streamed-arrival serving through the continuous-batching
-        engine: ragged prompts join as slots/pages free up."""
+        engine: ragged prompts join as slots/pages free up, decode runs
+        in ``ticks_per_sync`` on-device chunks between scheduler events
+        (1 = the PR-4 host-sync-per-token loop)."""
         import numpy as np
 
         from repro.serving import ServingEngine
@@ -112,7 +115,8 @@ def bench_serving(
         def go():
             eng = ServingEngine(p, cfg, num_slots=batch,
                                 page_size=page_size,
-                                max_seq_len=prompt_len + gen)
+                                max_seq_len=prompt_len + gen,
+                                ticks_per_sync=ticks_per_sync)
             for i, pr in enumerate(prompts):
                 eng.submit(pr, gen, arrival=i * arrive_every)
             t0 = time.time()
@@ -132,14 +136,35 @@ def bench_serving(
     # keep the static prefill/decode benchmark working for them and mark
     # the streamed section unsupported instead of crashing
     if cfg.window is None and not cfg.enc_layers:
-        cb_dense, _, _ = run_stream(params)
-        cb_packed, cb_util, cb_cfg = run_stream(packed)
+        # streamed tok/s per on-device chunk size: ticks_per_sync=1 is
+        # the PR-4 host-sync-per-token baseline, larger chunks amortize
+        # the scheduler round-trip (DESIGN.md §10).  check.sh gates that
+        # chunked packed throughput beats the single-tick baseline.
+        by_tps: Dict[str, Any] = {}
+        cb_cfg: Dict[str, Any] = {}
+        for tps in (1, 4, 16):
+            d_tok, _, _ = run_stream(params, ticks_per_sync=tps)
+            p_tok, util, cb_cfg = run_stream(packed, ticks_per_sync=tps)
+            by_tps[str(tps)] = {
+                "ticks_per_sync": tps,
+                "dense_tok_s": d_tok,
+                "packed_tok_s": p_tok,
+                "slot_utilization": util,
+            }
+        base = by_tps["1"]
+        best = max(by_tps.values(), key=lambda r: r["packed_tok_s"])
         cb = {
             **cb_cfg,
-            "dense_tok_s": cb_dense,
-            "packed_tok_s": cb_packed,
-            "decode_speedup": cb_packed / max(cb_dense, 1e-9),
-            "slot_utilization": cb_util,
+            "dense_tok_s": base["dense_tok_s"],
+            "packed_tok_s": base["packed_tok_s"],
+            "decode_speedup":
+                base["packed_tok_s"] / max(base["dense_tok_s"], 1e-9),
+            "slot_utilization": base["slot_utilization"],
+            "by_ticks_per_sync": by_tps,
+            "chunked_packed_tok_s": best["packed_tok_s"],
+            "chunked_ticks_per_sync": best["ticks_per_sync"],
+            "chunked_speedup_vs_single_tick":
+                best["packed_tok_s"] / max(base["packed_tok_s"], 1e-9),
         }
     else:
         cb = {"unsupported": "SWA window / encoder-decoder arch"}
@@ -171,7 +196,7 @@ def main(quick: bool = False):
     with open("BENCH_serving.json", "w") as f:
         json.dump(r, f, indent=2)
     c = r["config"]
-    return [
+    lines = [
         f"serving_prefill_dense,{r['dense_prefill_ms'] * 1e3:.0f},"
         f"b{c['batch']}xS{c['prompt_len']} d{c['d_model']}",
         f"serving_prefill_packed,{r['packed_prefill_ms'] * 1e3:.0f},"
@@ -180,6 +205,15 @@ def main(quick: bool = False):
         f"packed={r['packed_tok_s']:.0f}tok/s "
         f"speedup={r['decode_speedup']:.2f}x",
     ]
+    cb = r["continuous_batching"]
+    if "chunked_packed_tok_s" in cb:
+        lines.append(
+            f"serving_stream_chunked,{cb['chunked_packed_tok_s']:.0f},"
+            f"packed@tps1={cb['packed_tok_s']:.0f}tok/s "
+            f"packed@tps{cb['chunked_ticks_per_sync']}="
+            f"{cb['chunked_packed_tok_s']:.0f}tok/s "
+            f"({cb['chunked_speedup_vs_single_tick']:.2f}x)")
+    return lines
 
 
 def cli() -> int:
@@ -220,9 +254,14 @@ def cli() -> int:
           f"({result['decode_speedup']:.2f}x)")
     cb = result["continuous_batching"]
     if "dense_tok_s" in cb:
-        print(f"  stream: dense {cb['dense_tok_s']:8.1f} tok/s  packed "
-              f"{cb['packed_tok_s']:8.1f} tok/s ({cb['decode_speedup']:.2f}x)  "
-              f"util {cb['slot_utilization']:.2f}")
+        for tps, row in sorted(cb["by_ticks_per_sync"].items(),
+                               key=lambda kv: int(kv[0])):
+            print(f"  stream[tps={tps:>2}]: dense {row['dense_tok_s']:8.1f} "
+                  f"tok/s  packed {row['packed_tok_s']:8.1f} tok/s  "
+                  f"util {row['slot_utilization']:.2f}")
+        print(f"  chunked packed speedup vs single-tick: "
+              f"{cb['chunked_speedup_vs_single_tick']:.2f}x "
+              f"(best at ticks_per_sync={cb['chunked_ticks_per_sync']})")
     else:
         print(f"  stream: skipped ({cb['unsupported']})")
     print(f"  -> {args.out}")

@@ -16,6 +16,7 @@ python -m pytest -q \
     tests/test_sparse_exec.py \
     tests/test_serve_equiv.py \
     tests/test_serving_engine.py \
+    tests/test_page_pool_props.py \
     tests/test_models.py \
     tests/test_pruner.py \
     tests/test_system.py
@@ -40,9 +41,19 @@ python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
 # continuous batching + paged KV pool (DESIGN.md §9): ragged prompts
 # arrive mid-stream, join decode slots freed by finished sequences, and
 # every stream is verified token-identical against its solo decode (the
-# command exits nonzero on any divergence)
+# command exits nonzero on any divergence).  ticks-per-sync 1 keeps the
+# PR-4 host-sync-per-token loop covered
 python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
-    --pruned 0.75 --prompt-len 12 --gen 8 --requests 5 --arrive-every 2
+    --pruned 0.75 --prompt-len 12 --gen 8 --requests 5 --arrive-every 2 \
+    --ticks-per-sync 1
+
+# chunked decode (DESIGN.md §10): 4 decode ticks per on-device chunk,
+# mixed per-request sampling (greedy + temperature 0.8 cycled through
+# the stream) — sampled streams verify too, replayed with the engine's
+# per-slot fold_in(base, rid) keys
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
+    --pruned 0.75 --prompt-len 12 --gen 8 --requests 5 --arrive-every 2 \
+    --ticks-per-sync 4 --request-temperatures 0,0.8 --top-k 16
 
 # serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
 # (full default size on purpose — ~10s on CPU, and the committed numbers
@@ -60,7 +71,17 @@ dp, pp = r["dense_prefill_ms"], r["packed_prefill_ms"]
 assert ds >= 1.5, f"decode_speedup regressed: {ds:.2f}x < 1.5x"
 assert pp <= 2.0 * dp, \
     f"packed prefill regressed >2x vs dense: {pp:.1f}ms vs {dp:.1f}ms"
-print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x OK")
+# chunked streamed serving (DESIGN.md §10): batching >= 4 decode ticks
+# into one on-device chunk must beat the single-tick (PR-4) loop on
+# packed streamed throughput — the whole point of amortizing the host
+# sync over the chunk
+cb = r["continuous_batching"]
+tick1 = cb["by_ticks_per_sync"]["1"]["packed_tok_s"]
+tick4 = cb["by_ticks_per_sync"]["4"]["packed_tok_s"]
+assert tick4 > tick1, \
+    f"chunked streamed decode lost to single-tick: {tick4:.0f} vs {tick1:.0f} tok/s"
+print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x, "
+      f"chunked stream {tick4 / tick1:.2f}x over single-tick OK")
 PY
 
 echo "check.sh: OK"

@@ -19,11 +19,16 @@ on CPU, compiled Pallas on TPU; MoE experts go through the fused
 flattened-planes kernel).  On a real fleet, add ``--mesh single|multi``
 for the production placement.
 
-``--stream`` switches to request-level serving (DESIGN.md §9): ragged
-prompts arrive every ``--arrive-every`` ticks and flow through the
-continuous-batching engine — paged KV pool, prefill-on-join, EOS'd
-slots re-admitted from the queue.  Each finished stream is verified
-token-identical against its solo decode (greedy mode).
+``--stream`` switches to request-level serving (DESIGN.md §9/§10):
+ragged prompts arrive every ``--arrive-every`` ticks and flow through
+the continuous-batching engine — paged KV pool (prompt K/V written
+straight into the request's pages at prefill), ``--ticks-per-sync``
+decode steps scanned on device between scheduler events, EOS'd slots
+re-admitted from the queue.  ``--request-temperatures`` cycles
+per-request sampling temperatures through the stream (co-batched
+requests sample independently).  Each finished stream is verified
+token-identical against its solo decode — including sampled streams,
+which are replicated with the engine's per-slot key derivation.
 """
 import argparse
 import sys
@@ -63,6 +68,15 @@ def main() -> int:
                     help="[--stream] ticks between request arrivals")
     ap.add_argument("--page-size", type=int, default=8,
                     help="[--stream] tokens per physical KV page")
+    ap.add_argument("--ticks-per-sync", type=int, default=4,
+                    help="[--stream] decode steps batched into one "
+                         "on-device chunk between scheduler events "
+                         "(1 = host sync per token)")
+    ap.add_argument("--request-temperatures", type=str, default=None,
+                    metavar="T0,T1,...",
+                    help="[--stream] per-request sampling temperatures, "
+                         "cycled over the stream (overrides --temperature "
+                         "per request; 0 = greedy)")
     args = ap.parse_args()
 
     import jax
@@ -170,9 +184,10 @@ def main() -> int:
 
 def _run_stream(args, cfg, params) -> int:
     """Continuous-batching demo: ragged prompts arrive over time, flow
-    through the paged-KV engine, and every finished stream is checked
-    token-identical against its solo decode (greedy only — sampled
-    engine streams use per-slot keys by design)."""
+    through the paged-KV engine in ``--ticks-per-sync`` on-device decode
+    chunks, and every finished stream — greedy OR sampled — is checked
+    token-identical against its solo decode (sampled streams are
+    replicated with the engine's per-slot fold_in(base, rid) keys)."""
     import time
 
     import jax
@@ -187,24 +202,27 @@ def _run_stream(args, cfg, params) -> int:
     lens = rng.integers(max(1, plen // 2), plen + 1, size=args.requests)
     prompts = [rng.integers(0, cfg.vocab, size=int(l)).astype(np.int32)
                for l in lens]
+    req_temps = None
+    if args.request_temperatures:
+        req_temps = [float(t) for t in args.request_temperatures.split(",")]
 
-    engine = ServingEngine(
-        params, cfg, num_slots=args.batch, page_size=args.page_size,
-        max_seq_len=plen + gen, temperature=args.temperature,
-        top_k=args.top_k, top_p=args.top_p, eos_id=args.eos_id,
-        seed=args.seed)
-    for i, p in enumerate(prompts):
-        engine.submit(p, gen, arrival=i * args.arrive_every)
+    def build():
+        eng = ServingEngine(
+            params, cfg, num_slots=args.batch, page_size=args.page_size,
+            max_seq_len=plen + gen, ticks_per_sync=args.ticks_per_sync,
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, eos_id=args.eos_id, seed=args.seed)
+        for i, p in enumerate(prompts):
+            kw = {}
+            if req_temps is not None:
+                kw["temperature"] = req_temps[i % len(req_temps)]
+            eng.submit(p, gen, arrival=i * args.arrive_every, **kw)
+        return eng
 
-    # warm the jitted prefill/insert/decode shapes so the printed numbers
-    # are steady-state (same discipline as the static path above)
-    warm = ServingEngine(params, cfg, num_slots=args.batch,
-                         page_size=args.page_size, max_seq_len=plen + gen,
-                         temperature=args.temperature, top_k=args.top_k,
-                         top_p=args.top_p, eos_id=args.eos_id, seed=args.seed)
-    for p in prompts:
-        warm.submit(p, gen)
-    warm.run()
+    # warm the jitted prefill/chunk shapes so the printed numbers are
+    # steady-state (same discipline as the static path above)
+    build().run()
+    engine = build()
 
     t0 = time.time()
     done = engine.run()
@@ -212,7 +230,8 @@ def _run_stream(args, cfg, params) -> int:
     emitted = sum(len(r.tokens) for r in done.values())
     print(f"streamed {len(done)} requests (ragged prompts "
           f"{int(lens.min())}..{int(lens.max())}, arrivals every "
-          f"{args.arrive_every} ticks) in {dt:.2f}s: {emitted} tokens, "
+          f"{args.arrive_every} ticks, {args.ticks_per_sync} ticks/sync) "
+          f"in {dt:.2f}s: {emitted} tokens, "
           f"{emitted / dt:.1f} tok/s aggregate, slot utilization "
           f"{engine.slot_utilization:.2f}, "
           f"{engine.pool.num_pages}x{args.page_size}-token pages/layer")
@@ -220,33 +239,49 @@ def _run_stream(args, cfg, params) -> int:
     print(f"  joins at ticks {sorted(joins)}; "
           f"pool free pages after drain: {engine.pool.free_pages}")
 
-    if args.temperature and args.temperature > 0:
-        print("  verify skipped: sampled engine streams use per-slot keys")
-        return 0
-
-    # token-identity vs solo decode through the static hot path (both
-    # halves jitted like main(); retraces only per distinct prompt length)
+    # token-identity vs solo decode through the static hot path.  Each
+    # request replays with ITS effective sampling params and the engine's
+    # per-slot key (fold_in(base, rid)) — so mixed greedy/sampled streams
+    # verify too.  Retraces per distinct (prompt length, sampling combo).
     prefill = jax.jit(lambda p, c, t: lm_prefill(p, c, {"tokens": t}, cfg))
-    generate = jax.jit(lambda p, c, t, l: lm_generate(
-        p, c, t, l, gen, cfg, eos_id=args.eos_id))
+    base_key = jax.random.PRNGKey(args.seed)
+    # sampling params are static (python-level branches in lm_generate):
+    # jit's own cache keys one compilation per distinct combo
+    generate = jax.jit(
+        lambda pp, c, tok, l, key, t, k, p: lm_generate(
+            pp, c, tok, l, gen, cfg, temperature=t, top_k=k, top_p=p,
+            eos_id=args.eos_id, key=key),
+        static_argnums=(5, 6, 7))
+
     bad = 0
     for rid, req in sorted(done.items()):
         toks = jnp.asarray(req.prompt[None])
         caches = init_caches(cfg, 1, req.prompt_len + gen, jnp.float32)
         logits, caches = prefill(params, caches, toks)
         first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        want, _ = generate(params, caches, first,
-                           jnp.asarray(req.prompt_len, jnp.int32))
+        t, k, p = engine.sampling_for(req)
+        want, _ = generate(
+            params, caches, first, jnp.asarray(req.prompt_len, jnp.int32),
+            jax.random.fold_in(base_key, rid), t, k, p)
+        # a stream may only be short of --gen if it legitimately hit EOS
+        # — otherwise a prefix match would mask dropped trailing tokens
+        short_ok = (args.eos_id is not None and len(req.tokens) >= 1
+                    and req.tokens[-1] == args.eos_id)
         want = np.asarray(want)[0][:len(req.tokens)]
-        if not np.array_equal(req.tokens, want):
+        if not np.array_equal(req.tokens, want) or (
+                len(req.tokens) != gen and not short_ok):
             bad += 1
             print(f"  request {rid}: MISMATCH vs solo decode "
-                  f"(got {req.tokens[:8]}.. want {want[:8]}..)")
+                  f"(got {len(req.tokens)} toks {req.tokens[:8]}.. "
+                  f"want {gen} toks {want[:8]}..)")
     if bad:
         print(f"stream verify FAILED: {bad}/{len(done)} requests diverged")
         return 1
+    n_sampled = sum(1 for r in done.values()
+                    if engine.sampling_for(r)[0] > 0)
     print(f"  verify OK: all {len(done)} streams token-identical to "
-          "solo decode")
+          f"solo decode ({n_sampled} sampled, {len(done) - n_sampled} "
+          "greedy)")
     return 0
 
 

@@ -200,6 +200,7 @@ def attention_prefill(
     use_rope: bool = True,
     accum=None,
     out_seq: str = "seq",
+    page_table: Optional[jnp.ndarray] = None,   # (B, max_pages) -> pool ids
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Batched causal prefill that also fills the KV cache.
 
@@ -208,8 +209,16 @@ def attention_prefill(
     ``[0, S)`` into the cache so decode can continue at ``cache_len=S``.
     With a sliding-window ring cache (alloc <= window) only the last
     ``alloc`` tokens are kept, each at slot ``t % alloc`` — the same
-    placement the per-token decode writes produce."""
+    placement the per-token decode writes produce.
+
+    With ``page_table`` the cache is a ``(num_pages, page_size, K, dh)``
+    pool (DESIGN.md §9/§10): token ``t`` of row ``b`` is scattered
+    straight into ``pool[table[b, t // ps], t % ps]`` — no contiguous
+    intermediate cache, so a serving engine can prefill directly into
+    the pages the request owns.  Ring (SWA) caches are not paged."""
     accum = accum or jnp.float32
+    if page_table is not None and window is not None:
+        raise ValueError("paged KV caches do not support SWA/ring windows")
     b, s, _ = x.shape
     q = _split_heads(dense(p["wq"], x), num_heads)
     k = _split_heads(dense(p["wk"], x), kv_heads)
@@ -232,7 +241,14 @@ def attention_prefill(
 
     alloc = cache["k"].shape[1]
     kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
-    if s <= alloc:
+    if page_table is not None:
+        ps = cache["k"].shape[1]
+        t = jnp.arange(s)
+        pid = page_table[:, t // ps]                   # (B, S) pool pages
+        off = jnp.broadcast_to(t % ps, (b, s))
+        ck = cache["k"].at[pid, off].set(kc)
+        cv = cache["v"].at[pid, off].set(vc)
+    elif s <= alloc:
         ck = jax.lax.dynamic_update_slice(cache["k"], kc, (0, 0, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], vc, (0, 0, 0, 0))
     else:  # ring: keep the last `alloc` tokens at their decode slots

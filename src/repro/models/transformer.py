@@ -521,10 +521,17 @@ def lm_prefill(
     ``prompt_len`` sequential decode steps.  batch["tokens"] (B, S).
     Returns (fp32 logits (B, S, V), caches ready for ``cache_len=S``).
 
+    With ``batch["page_tables"]`` (B, max_pages) the attention caches
+    are page pools — ``(num_pages, page_size, K, dh)`` — and every
+    self-attn layer scatters its prompt K/V straight into the pages the
+    rows own (paged prefill, DESIGN.md §10); recurrent and cross-attn
+    caches are unaffected.
+
     Runs unchanged on packed (BSR) params — every matmul routes through
     the ``layers.matmul`` / ``layers.expert_matmul`` dispatch points."""
     tokens = batch["tokens"]
     b, s = tokens.shape
+    page_tables = batch.get("page_tables")
     x = embed_lookup(params["embed"], tokens, dtype=cfg.adtype)
 
     if cfg.num_patches > 0 and "patch_embeds" in batch:
@@ -557,7 +564,7 @@ def lm_prefill(
                 window=cfg.window, chunk=cfg.attn_chunk,
                 rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
                 use_rope=spec.use_rope, accum=_accum(cfg),
-                out_seq=_out_seq(cfg),
+                out_seq=_out_seq(cfg), page_table=page_tables,
             )
             if spec.cross_attn:
                 xc = _norm_apply(cfg, lp["cross_norm"], x + h)
@@ -652,6 +659,45 @@ def _select_token(
         lg = _nucleus_filter(lg, top_p)
     rng, sub = jax.random.split(rng)
     return jax.random.categorical(sub, lg, axis=-1).astype(jnp.int32), rng
+
+
+def _select_token_rows(
+    logits: jnp.ndarray,            # (B, V) fp32
+    rngs: jnp.ndarray,              # (B, 2) uint32 per-row keys
+    temperature: jnp.ndarray,       # (B,) fp32; <= 0 rows are greedy
+    top_k: jnp.ndarray,             # (B,) int32; <= 0 disables the filter
+    top_p: jnp.ndarray,             # (B,) fp32; >= 1 disables the filter
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row token selection with *traced* ``(B,)`` sampling params —
+    the continuous-batching analogue of :func:`_select_token`, where
+    co-batched requests each carry their own temperature/top-k/top-p.
+
+    Row semantics match ``_select_token`` **bitwise** for the same scalar
+    params: disabled filters select the *unfiltered* logits (not a
+    filtered copy that merely looks equivalent), greedy rows never
+    advance their rng, and sampled rows split exactly once per call — so
+    a request's stream is independent of what its co-batch is doing.
+    Returns ((B,) int32 tokens, advanced per-row rngs)."""
+    v = logits.shape[-1]
+
+    def row(lg, rng, t, k, p):
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        scaled = lg / jnp.where(t > 0.0, t, 1.0)
+        # rank-based top-k keep set (ties break by vocab id, like
+        # _select_token); k outside (0, V) keeps every rank
+        ranks = jnp.argsort(jnp.argsort(-scaled))
+        kk = jnp.where((k > 0) & (k < v), k, v)
+        lk = jnp.where(ranks < kk, scaled, -jnp.inf)
+        lp = jnp.where(p < 1.0, _nucleus_filter(lk[None], p)[0], lk)
+        rng2, sub = jax.random.split(rng)
+        sampled = jax.random.categorical(sub, lp).astype(jnp.int32)
+        tok = jnp.where(t > 0.0, sampled, greedy)
+        return tok, jnp.where(t > 0.0, rng2, rng)
+
+    return jax.vmap(row)(
+        logits.astype(jnp.float32), rngs,
+        jnp.asarray(temperature, jnp.float32),
+        jnp.asarray(top_k, jnp.int32), jnp.asarray(top_p, jnp.float32))
 
 
 def lm_generate(

@@ -1,10 +1,12 @@
 """Request-level serving: paged KV caches + continuous batching.
 
-See DESIGN.md §9.  The static fixed-batch hot path stays in
+See DESIGN.md §9/§10.  The static fixed-batch hot path stays in
 ``repro.models`` (``lm_prefill`` / ``lm_generate``); this package adds
 the orchestration layer for streamed request arrival: a page-pool
-allocator, a FIFO admission scheduler, and the engine whose decode step
-threads per-row ``cache_len`` and page tables through ``lm_decode``.
+allocator, a FIFO admission scheduler, and the engine that scans
+``ticks_per_sync`` decode steps on device between scheduler events —
+per-row ``cache_len``, page tables and per-slot sampling params all
+threaded through ``lm_decode`` inside one ``lax.scan`` chunk.
 """
 from .engine import ServingEngine
 from .pages import NULL_PAGE, PagePool

@@ -1,31 +1,40 @@
 """Continuous-batching serving engine over paged KV caches.
 
 The engine owns a fixed number of *decode slots* (rows of the jitted
-decode step) and one page pool per attention layer (DESIGN.md §9).  Its
-host loop interleaves three things per tick:
+decode step) and one page pool per attention layer (DESIGN.md §9/§10).
+Its host loop interleaves three things per scheduler event:
 
 1. **admission** — the FIFO scheduler hands over requests whose whole
    token budget fits in the pool; each gets a free slot, freshly
-   allocated pages, and a *prefill-on-join*: one jitted ``lm_prefill``
-   over its (unpadded) prompt, whose KV is copied page-by-page into the
-   pool and whose recurrent states (mamba/xLSTM) are written into the
-   slot row.  The first token is the prefill argmax — identical to the
-   static hot path in ``launch/serve.py``.
-2. **decode** — ONE jitted ``lm_decode`` step for all slots: per-row
-   ``cache_len`` masks, per-row page-table reads/writes.  Free slots ride
-   along pointing at the null page; their outputs are discarded.
+   allocated pages, and a *paged prefill-on-join*: one jitted
+   ``lm_prefill`` over its (unpadded) prompt whose attention K/V is
+   scattered straight into the pages the request owns (no contiguous
+   intermediate cache) and whose recurrent states (mamba/xLSTM) are
+   written into the slot row.  The first token is the prefill argmax —
+   identical to the static hot path in ``launch/serve.py``.
+2. **decode** — ONE jitted ``_decode_chunk`` call scans
+   ``ticks_per_sync`` decode steps for all slots on device: per-row
+   ``cache_len`` masks, per-row page-table reads/writes, per-slot
+   *traced* sampling params, per-slot PRNG keys advancing in-scan, and
+   per-slot ``done`` masks that freeze EOS'd / budget-exhausted rows
+   mid-chunk.  One device->host transfer returns the whole token block
+   plus per-row emitted counts — the per-token host sync of PR 4 is
+   amortized over the chunk.
 3. **retirement** — rows that hit EOS or their budget give their pages
-   back to the pool, freeing the slot for the next admission.
+   back to the pool, freeing the slot for the next admission.  Admission
+   and retirement only ever happen at chunk boundaries.
 
 Because every row's attention is masked to its own ``[0, cache_len)``
 and its pages are exclusively owned, a sequence that joins mid-stream
 computes exactly what it would compute decoded alone — the token-identity
 property ``tests/test_serving_engine.py`` pins down for dense and
-packed-BSR params.  Sampling (temperature/top-k/top-p) uses a *per-slot*
-PRNG key seeded from the request id, so sampled streams are also
-independent of co-batching.  MoE archs run but route tokens jointly
-across the batch, so only greedy dense/attention stacks carry the
-bit-identity guarantee.
+packed-BSR params at every ``ticks_per_sync``.  Sampling params are
+per-request (``submit(..., temperature=, top_k=, top_p=)`` overriding
+the engine defaults) and ride the scan as ``(B,)`` vectors with a
+*per-slot* PRNG key seeded from the request id, so sampled streams are
+also independent of co-batching.  MoE archs run but route tokens jointly
+across the batch, so only dense/attention stacks carry the bit-identity
+guarantee.
 """
 from __future__ import annotations
 
@@ -39,7 +48,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import init_caches, layer_specs, lm_decode, lm_prefill
-from repro.models.transformer import _select_token
+from repro.models.transformer import _select_token_rows
 
 from .pages import NULL_PAGE, PagePool
 from .scheduler import Request, Scheduler
@@ -59,64 +68,98 @@ class _Slot:
 # one compilation cache per (cfg, shapes) — a warm-up engine really warms
 # the engine being measured.
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _prefill_step(params, tokens, *, cfg):
-    """Prefill-on-join: one cache-filling pass over a (1, L) prompt."""
-    caches = init_caches(cfg, 1, tokens.shape[1], jnp.float32)
-    logits, caches = lm_prefill(params, caches, {"tokens": tokens}, cfg)
-    first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-    return first, caches
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnames=("caches",))
-def _insert_step(caches, row_caches, page_ids, slot, *, cfg):
-    """Copy a prefilled single-row cache into the pool: whole KV pages
-    for attention layers, slot rows for recurrent (SSM/xLSTM) state."""
-    n = page_ids.shape[0]
+def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg):
+    """Paged prefill-on-join: one cache-filling pass over a (1, L) prompt
+    that writes attention K/V *directly* into the pool pages named by
+    ``table`` (1, max_pages) — no contiguous intermediate cache, no
+    page-wise copy afterwards.  Recurrent (SSM/xLSTM) layers prefill into
+    a scratch single-row cache whose final state lands in row ``slot``
+    of the per-slot pool.  Returns (first_token (1,), new caches)."""
+    specs = layer_specs(cfg)
+    row_caches = init_caches(cfg, 1, tokens.shape[1], jnp.float32)
+    pre = [pool if spec.mixer == "attn" else rc
+           for spec, pool, rc in zip(specs, caches, row_caches)]
+    logits, new = lm_prefill(
+        params, pre, {"tokens": tokens, "page_tables": table}, cfg)
+    first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
     out = []
-    for spec, pool, rc in zip(layer_specs(cfg), caches, row_caches):
+    for spec, pool, nc in zip(specs, caches, new):
         if spec.mixer == "attn":
-            ps = pool["k"].shape[1]
-            upd = {}
-            for key in ("k", "v"):
-                kv = rc[key][0]                             # (L, K, dh)
-                pad = n * ps - kv.shape[0]
-                kv = jnp.pad(kv, ((0, pad), (0, 0), (0, 0)))
-                kv = kv.reshape(n, ps, *kv.shape[1:])
-                upd[key] = pool[key].at[page_ids].set(
-                    kv.astype(pool[key].dtype))
-            out.append(upd)
-        elif rc:
+            out.append(nc)          # pool already holds the prompt pages
+        elif nc:
             out.append(jax.tree_util.tree_map(
                 lambda P, r: P.at[slot].set(r[0].astype(P.dtype)),
-                pool, rc))
+                pool, nc))
         else:
             out.append(pool)
-    return out
+    return first, out
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "temperature", "top_k", "top_p"),
+    jax.jit, static_argnames=("cfg", "ticks", "eos_id", "sampled"),
     donate_argnames=("caches",))
-def _decode_step(params, caches, tok, cache_len, tables, rngs, *,
-                 cfg, temperature, top_k, top_p):
-    """One batched decode tick: per-row cache_len + page-table masks."""
-    logits, caches = lm_decode(
-        params, caches, {"tokens": tok, "page_tables": tables},
-        cache_len, cfg)
-    lg = logits[:, -1].astype(jnp.float32)
-    if temperature and temperature > 0.0:
-        # per-slot keys -> each row's sample stream ignores its co-batch
-        # (join-invariant sampling)
-        def row(l, k):
-            t, k = _select_token(l[None], k, temperature=temperature,
-                                 top_k=top_k, top_p=top_p)
-            return t[0], k
-        nxt, rngs = jax.vmap(row)(lg, rngs)
-    else:
-        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    return nxt, caches, rngs
+def _decode_chunk(params, caches, tok, cache_len, tables, rngs,
+                  temperature, top_k, top_p, budget_left, *,
+                  cfg, ticks, eos_id, sampled):
+    """``ticks`` batched decode steps in ONE ``lax.scan`` — the chunk
+    between two scheduler events (DESIGN.md §10).
+
+    Per-row ``done`` masks freeze rows mid-chunk the moment they emit
+    ``eos_id`` or exhaust ``budget_left``: a frozen row keeps its token,
+    ``cache_len`` and rng untouched for the rest of the chunk (its
+    lockstep decode output is discarded), so the tokens it *did* emit are
+    bit-identical to its solo decode no matter where in a chunk it
+    finished.  Sampling params are traced ``(B,)`` vectors — co-batched
+    requests keep independent temperature/top-k/top-p — and per-row rngs
+    advance in-scan only on live sampled rows.  ``sampled=False`` (a
+    static host decision: no live slot has temperature > 0) compiles the
+    pure-argmax variant with none of the per-row filter argsorts.  Once
+    every row is done the remaining steps skip the decode body via
+    ``lax.cond``.
+
+    Returns (token block (ticks, B), per-row emitted counts (B,),
+    last tok (B, 1), cache_len (B,), rngs (B, 2), caches) in a single
+    host transfer."""
+    b = tok.shape[0]
+    done0 = budget_left <= 0          # free slots ride along frozen
+
+    def live_step(operand):
+        tok, clen, rngs, done, left, cs = operand
+        logits, cs = lm_decode(
+            params, cs, {"tokens": tok, "page_tables": tables}, clen, cfg)
+        if sampled:
+            nxt, rngs2 = _select_token_rows(
+                logits[:, -1], rngs, temperature, top_k, top_p)
+        else:
+            nxt, rngs2 = jnp.argmax(
+                logits[:, -1], axis=-1).astype(jnp.int32), rngs
+        live = ~done
+        # frozen rows: discard the lockstep output, keep all state.
+        # (their page writes land at their frozen cache_len inside their
+        # own — or the null — page, attended by nobody.)
+        emit = jnp.where(live, nxt, tok[:, 0])
+        left = jnp.where(live, left - 1, left)
+        done = done | (left <= 0)
+        if eos_id is not None:
+            done = done | (live & (emit == eos_id))
+        clen = jnp.where(live, clen + 1, clen)
+        rngs = jnp.where(live[:, None], rngs2, rngs)
+        tok = jnp.where(live[:, None], nxt[:, None], tok)
+        return (tok, clen, rngs, done, left, cs), (emit, live)
+
+    def step(carry, _):
+        return jax.lax.cond(
+            jnp.all(carry[3]),
+            lambda op: (op, (op[0][:, 0], jnp.zeros((b,), bool))),
+            live_step, carry)
+
+    carry0 = (tok, cache_len, rngs, done0, budget_left, caches)
+    (tok, cache_len, rngs, _, _, caches), (toks, lives) = jax.lax.scan(
+        step, carry0, None, length=ticks)
+    counts = jnp.sum(lives.astype(jnp.int32), axis=0)
+    return toks, counts, tok, cache_len, rngs, caches
 
 
 class ServingEngine:
@@ -134,6 +177,12 @@ class ServingEngine:
         fixes the page-table width.
     num_pages : physical pages per layer pool (page 0 is the null page).
         Defaults to every slot holding a full-length sequence.
+    ticks_per_sync : decode steps batched into one on-device chunk
+        between scheduler events.  1 reproduces the PR-4 tick-per-sync
+        loop; larger chunks amortize the host round-trip at the cost of
+        admissions/retirements only happening at chunk boundaries.
+    temperature / top_k / top_p : engine-wide sampling defaults; each
+        request may override them at :meth:`submit`.
     """
 
     def __init__(
@@ -145,6 +194,7 @@ class ServingEngine:
         page_size: int = 8,
         max_seq_len: int = 64,
         num_pages: Optional[int] = None,
+        ticks_per_sync: int = 1,
         temperature: float = 0.0,
         top_k: Optional[int] = None,
         top_p: Optional[float] = None,
@@ -155,8 +205,11 @@ class ServingEngine:
             raise ValueError("paged KV caches do not support SWA windows")
         if cfg.enc_layers:
             raise ValueError("encoder-decoder archs are not paged-servable")
+        if ticks_per_sync < 1:
+            raise ValueError("ticks_per_sync must be >= 1")
         self.params, self.cfg = params, cfg
         self.num_slots = num_slots
+        self.ticks_per_sync = ticks_per_sync
         self.max_pages = -(-max_seq_len // page_size)
         if num_pages is None:
             num_pages = num_slots * self.max_pages + 1
@@ -180,12 +233,16 @@ class ServingEngine:
                                     jnp.float32)}
             self.caches.append(c)
 
-        # host-mirrored per-slot state, pushed to device every tick
+        # host-mirrored per-slot state, pushed to device every chunk
         self._tok = np.zeros((num_slots, 1), np.int32)
         self._cache_len = np.zeros((num_slots,), np.int32)
         self._tables = np.full((num_slots, self.max_pages), NULL_PAGE,
                                np.int32)
         self._rngs = np.zeros((num_slots, 2), np.uint32)
+        # per-slot sampling params, traced into the chunk as (B,) vectors
+        self._temp = np.zeros((num_slots,), np.float32)
+        self._topk = np.zeros((num_slots,), np.int32)      # 0: disabled
+        self._topp = np.ones((num_slots,), np.float32)     # 1: disabled
         self.slots: List[Optional[_Slot]] = [None] * num_slots
         self.tick = 0
         self._next_rid = 0
@@ -194,10 +251,17 @@ class ServingEngine:
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, prompt, max_new: int, arrival: int = 0) -> int:
+    def submit(self, prompt, max_new: int, arrival: int = 0, *,
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None,
+               top_p: Optional[float] = None) -> int:
+        """Queue a request.  Per-request sampling params default to the
+        engine-level settings; pass e.g. ``temperature=0.0`` to force a
+        greedy stream inside a sampled engine (or vice versa)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      arrival=arrival)
+                      arrival=arrival, temperature=temperature,
+                      top_k=top_k, top_p=top_p)
         if max_new < 1 or prompt.size < 1:
             raise ValueError("need a non-empty prompt and max_new >= 1")
         if self.pool.pages_for(req.budget_tokens) > self.max_pages:
@@ -208,6 +272,15 @@ class ServingEngine:
         self.scheduler.submit(req)
         return req.rid
 
+    def sampling_for(self, req: Request):
+        """The effective (temperature, top_k, top_p) a request decodes
+        with: its own overrides where set, engine defaults elsewhere.
+        (Public so solo-decode verifiers can replicate the stream.)"""
+        t = req.temperature if req.temperature is not None else self.temperature
+        k = req.top_k if req.top_k is not None else self.top_k
+        p = req.top_p if req.top_p is not None else self.top_p
+        return (float(t or 0.0), k, p)
+
     # -- engine loop -------------------------------------------------------
 
     def _admit(self) -> int:
@@ -216,19 +289,21 @@ class ServingEngine:
         for req in admitted:
             slot = free.pop(0)
             pages = self.pool.alloc(req.budget_tokens)
-            first, row_caches = _prefill_step(
-                self.params, jnp.asarray(req.prompt[None]), cfg=self.cfg)
-            self.caches = _insert_step(
-                self.caches, row_caches,
-                jnp.asarray(pages, jnp.int32), jnp.asarray(slot, jnp.int32),
-                cfg=self.cfg)
             self._tables[slot] = NULL_PAGE
             self._tables[slot, :len(pages)] = pages
+            first, self.caches = _paged_prefill_step(
+                self.params, jnp.asarray(req.prompt[None]), self.caches,
+                jnp.asarray(self._tables[slot][None]),
+                jnp.asarray(slot, jnp.int32), cfg=self.cfg)
             self._cache_len[slot] = req.prompt_len
             tok = int(first[0])
             self._tok[slot, 0] = tok
             self._rngs[slot] = np.asarray(
                 jax.random.fold_in(self._base_key, req.rid), np.uint32)
+            t, k, p = self.sampling_for(req)
+            self._temp[slot] = t
+            self._topk[slot] = k if k is not None else 0
+            self._topp[slot] = p if p is not None else 1.0
             req.admitted_at = self.tick
             self.slots[slot] = _Slot(req=req, pages=pages, emitted=[tok])
             self._maybe_finish(slot)
@@ -246,37 +321,62 @@ class ServingEngine:
             self._tables[slot] = NULL_PAGE
             self._cache_len[slot] = 0
             self._tok[slot, 0] = 0
+            self._temp[slot], self._topk[slot], self._topp[slot] = 0.0, 0, 1.0
             self.scheduler.retire(s.req, s.pages, self.tick)
 
     def step(self) -> int:
-        """One engine tick: admit, then one batched decode step.  Returns
-        the number of requests admitted this tick."""
+        """One scheduler event: admit, then ONE on-device chunk of
+        ``ticks_per_sync`` decode steps.  Returns the number of requests
+        admitted this event."""
         admitted = self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
-        if active:
-            nxt, self.caches, rngs = _decode_step(
-                self.params, self.caches, jnp.asarray(self._tok),
-                jnp.asarray(self._cache_len), jnp.asarray(self._tables),
-                jnp.asarray(self._rngs), cfg=self.cfg,
-                temperature=self.temperature, top_k=self.top_k,
-                top_p=self.top_p)
-            nxt = np.asarray(nxt)
-            self._rngs = np.array(rngs)   # copy: host mirror stays writable
-            for i in active:
-                self._cache_len[i] += 1
-                self._tok[i, 0] = int(nxt[i])
-                self.slots[i].emitted.append(int(nxt[i]))
-                self._maybe_finish(i)
-            self.active_slot_ticks += len(active)
-            self.decode_ticks += 1
-        self.tick += 1
+        if not active:
+            self.tick += 1
+            return admitted
+        left = np.zeros((self.num_slots,), np.int32)
+        for i in active:
+            left[i] = self.slots[i].req.max_new - len(self.slots[i].emitted)
+        ticks = self.ticks_per_sync
+        toks, counts, tok, clen, rngs, self.caches = _decode_chunk(
+            self.params, self.caches, jnp.asarray(self._tok),
+            jnp.asarray(self._cache_len), jnp.asarray(self._tables),
+            jnp.asarray(self._rngs), jnp.asarray(self._temp),
+            jnp.asarray(self._topk), jnp.asarray(self._topp),
+            jnp.asarray(left), cfg=self.cfg, ticks=ticks,
+            eos_id=self.eos_id, sampled=bool(np.any(self._temp > 0.0)))
+        toks, counts = np.asarray(toks), np.asarray(counts)
+        self._tok = np.array(tok)
+        self._cache_len = np.array(clen)
+        self._rngs = np.array(rngs)
+        for i in active:
+            self.slots[i].emitted.extend(
+                int(t) for t in toks[:int(counts[i]), i])
+            self._maybe_finish(i)
+        self.active_slot_ticks += int(counts.sum())
+        self.decode_ticks += ticks
+        self.tick += ticks
         return admitted
 
+    def _state(self) -> str:
+        """One-line engine state for stall diagnostics."""
+        waiting = [(r.rid, r.budget_tokens,
+                    self.pool.pages_for(r.budget_tokens), r.arrival)
+                   for r in self.scheduler.waiting]
+        active = [(s.req.rid, len(s.emitted), s.req.max_new)
+                  for s in self.slots if s is not None]
+        return (f"tick={self.tick} "
+                f"waiting(rid,budget_tok,pages,arrival)={waiting} "
+                f"active(rid,emitted,max_new)={active} "
+                f"pool={self.pool.free_pages}/{self.pool.num_pages - 1} "
+                f"pages free (page_size={self.pool.page_size}, "
+                f"max {self.max_pages} pages/request)")
+
     def run(self, max_ticks: int = 100_000) -> Dict[int, Request]:
-        """Drive ticks until every submitted request has finished."""
+        """Drive chunks until every submitted request has finished."""
         while self.scheduler.pending or any(s is not None for s in self.slots):
             if self.tick >= max_ticks:
-                raise RuntimeError(f"engine stalled after {max_ticks} ticks")
+                raise RuntimeError(
+                    f"engine stalled after {max_ticks} ticks: {self._state()}")
             # a tick that starts fully idle with a due request and admits
             # nothing can never make progress (no pages will ever free)
             idle = all(s is None for s in self.slots)
@@ -284,10 +384,13 @@ class ServingEngine:
                    and self.scheduler.waiting[0].arrival <= self.tick)
             admitted = self.step()
             if idle and due and not admitted:
+                head = self.scheduler.waiting[0]
                 raise RuntimeError(
-                    "admission stalled: head request cannot fit "
-                    f"({self.scheduler.waiting[0].budget_tokens} tokens) "
-                    f"with {self.pool.free_pages} free pages")
+                    "admission stalled: head request "
+                    f"rid={head.rid} needs "
+                    f"{self.pool.pages_for(head.budget_tokens)} pages "
+                    f"({head.budget_tokens} tokens) but the drained pool "
+                    f"only has {self.pool.free_pages}; {self._state()}")
         return {r.rid: r for r in self.scheduler.finished}
 
     @property

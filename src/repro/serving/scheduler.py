@@ -25,11 +25,20 @@ __all__ = ["Request", "Scheduler"]
 
 @dataclasses.dataclass
 class Request:
-    """One generation request in the stream."""
+    """One generation request in the stream.
+
+    ``temperature`` / ``top_k`` / ``top_p`` override the engine-level
+    sampling defaults for this request alone — co-batched requests keep
+    independent sampling because the decode chunk threads them through
+    the scan as per-slot ``(B,)`` vectors (DESIGN.md §10).  ``None``
+    means "inherit the engine default"."""
     rid: int
     prompt: np.ndarray            # (L,) int32 prompt tokens
     max_new: int                  # generation budget (incl. first token)
     arrival: int = 0              # earliest engine tick it may be admitted
+    temperature: Optional[float] = None   # <= 0: greedy argmax
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
     # filled by the engine:
     tokens: Optional[np.ndarray] = None   # emitted tokens, set on finish
     admitted_at: Optional[int] = None

@@ -1,0 +1,81 @@
+"""Property-based :class:`PagePool` invariants (DESIGN.md §9/§10).
+
+Random alloc/free traces — driven by hypothesis when installed, the
+seeded fixed-corpus fallback in ``tests/_hyp.py`` otherwise — must
+uphold the allocator's contract at EVERY step of the trace, not just at
+quiescence:
+
+* the null page (id 0) is never handed out and never freeable,
+* a live (allocated, not yet freed) page is never handed out again,
+* ``free_pages + live == num_pages - 1`` — pages are conserved,
+* ``can_alloc`` tells the truth: an alloc it approves succeeds, one it
+  rejects raises without changing the pool.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.serving import NULL_PAGE, PagePool
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(2, 17),
+    st.integers(1, 9),
+)
+def test_pool_random_trace_invariants(seed, num_pages, page_size):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=num_pages, page_size=page_size)
+    usable = num_pages - 1
+    live = {}                       # alloc seq no -> page list
+    n_allocs = 0
+    for _ in range(40):
+        do_alloc = bool(rng.integers(2)) or not live
+        if do_alloc:
+            tokens = int(rng.integers(1, 3 * page_size + 1))
+            need = pool.pages_for(tokens)
+            assert need == max(1, -(-tokens // page_size))
+            if pool.can_alloc(tokens):
+                got = pool.alloc(tokens)
+                assert len(got) == need
+                assert NULL_PAGE not in got
+                assert all(0 < p < num_pages for p in got)
+                # no page may be live twice
+                flat = [p for ps in live.values() for p in ps]
+                assert set(got).isdisjoint(flat)
+                assert len(set(got)) == len(got)
+                live[n_allocs] = got
+                n_allocs += 1
+            else:
+                before = pool.free_pages
+                with pytest.raises(RuntimeError):
+                    pool.alloc(tokens)
+                assert pool.free_pages == before   # failed alloc is a no-op
+        else:
+            key = list(live)[int(rng.integers(len(live)))]
+            pool.free(live.pop(key))
+        n_live = sum(len(ps) for ps in live.values())
+        assert pool.free_pages + n_live == usable   # conservation
+        assert pool.used_pages == n_live
+
+    for pages in live.values():                     # drain: all pages return
+        pool.free(pages)
+    assert pool.free_pages == usable and pool.used_pages == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 9))
+def test_pool_rejects_double_and_null_frees(seed, num_pages):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=num_pages, page_size=4)
+    got = pool.alloc(int(rng.integers(1, 4 * (num_pages - 1) + 1))) \
+        if pool.can_alloc(1) else []
+    with pytest.raises(ValueError):
+        pool.free([NULL_PAGE])
+    if got:
+        pool.free(got)
+        with pytest.raises(ValueError):
+            pool.free([got[0]])                     # double free
+        with pytest.raises(ValueError):
+            pool.free([num_pages + 7])              # out of range

@@ -13,7 +13,11 @@ import pytest
 from repro.configs import get_config, make_smoke
 from repro.core import BlockingSpec
 from repro.models import init_caches, init_params, lm_generate, lm_prefill
-from repro.models.attention import attention_decode, attention_init
+from repro.models.attention import (
+    attention_decode,
+    attention_init,
+    attention_prefill,
+)
 from repro.serving import NULL_PAGE, PagePool, Request, Scheduler, ServingEngine
 from repro.sparse import knapsack_prune, pack_params
 
@@ -60,6 +64,59 @@ def test_scheduler_fifo_admission_and_head_of_line():
     assert [r.rid for r in got] == [1]     # FIFO order, late still future
     pool.alloc(small.budget_tokens)
     assert [r.rid for r in sched.admit(tick=5, free_slots=2)] == [2]
+
+
+def test_scheduler_same_tick_admissions_reserve_against_each_other():
+    """Full-budget admission must never over-reserve the pool: requests
+    admitted on the SAME tick reserve pages against each other, before
+    any page is physically allocated."""
+    pool = PagePool(num_pages=5, page_size=4)            # 4 usable pages
+    sched = Scheduler(pool)
+    for rid in range(3):                                 # 3 pages each
+        sched.submit(Request(rid=rid, prompt=np.zeros(8, np.int32),
+                             max_new=4))
+    got = sched.admit(tick=0, free_slots=3)
+    assert [r.rid for r in got] == [0]                   # 3 + 3 > 4 blocks #1
+    assert sum(pool.pages_for(r.budget_tokens) for r in got) \
+        <= pool.free_pages
+
+
+def test_scheduler_admission_and_retirement_invariants_fuzz():
+    """Random submit/admit/retire traffic: admitted budgets always fit
+    the pool at admission time, and retirement returns EXACTLY the page
+    count that was reserved."""
+    rng = np.random.default_rng(3)
+    pool = PagePool(num_pages=9, page_size=4)
+    sched = Scheduler(pool)
+    live, rid = [], 0
+    for tick in range(60):
+        for _ in range(int(rng.integers(0, 3))):
+            sched.submit(Request(
+                rid=rid, prompt=np.zeros(int(rng.integers(1, 12)), np.int32),
+                max_new=int(rng.integers(1, 8)), arrival=tick))
+            rid += 1
+        free_slots = 4 - len(live)
+        got = sched.admit(tick, free_slots)
+        assert len(got) <= free_slots
+        # the whole same-tick batch fits the pool as it stands
+        assert sum(pool.pages_for(r.budget_tokens) for r in got) \
+            <= pool.free_pages
+        for r in got:
+            pages = pool.alloc(r.budget_tokens)          # cannot raise
+            assert len(pages) == pool.pages_for(r.budget_tokens)
+            live.append((r, pages))
+        keep = []
+        for r, pages in live:
+            if rng.integers(2):
+                before = pool.free_pages
+                sched.retire(r, pages, tick)
+                assert pool.free_pages == before + len(pages)
+            else:
+                keep.append((r, pages))
+        live = keep
+    for r, pages in live:
+        sched.retire(r, pages, tick)
+    assert pool.free_pages == pool.num_pages - 1
 
 
 def test_scheduler_orders_queue_by_arrival_not_submit_order():
@@ -114,6 +171,36 @@ def test_attention_decode_paged_matches_contiguous():
         got = cp["k"][tables[r, L // ps], L % ps]
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-6)
+
+
+def test_attention_prefill_paged_writes_match_contiguous():
+    """Paged prefill scatters the prompt K/V straight into pool pages:
+    same attention output as the contiguous cache, and every logical
+    slot lands at pool[table[t // ps], t % ps] of the row's own table."""
+    b, ps, npages_seq, kvh, h, dh, d, s = 2, 4, 3, 2, 4, 16, 64, 10
+    key = jax.random.PRNGKey(0)
+    p = attention_init(key, d, h, kvh, dh)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+
+    cache_c = {"k": jnp.zeros((b, ps * npages_seq, kvh, dh)),
+               "v": jnp.zeros((b, ps * npages_seq, kvh, dh))}
+    out_c, cc = attention_prefill(p, x, cache_c, num_heads=h, kv_heads=kvh,
+                                  head_dim=dh)
+
+    tables = jnp.asarray([[3, 1, 5], [2, 6, 4]], jnp.int32)
+    pool = {"k": jnp.zeros((7, ps, kvh, dh)), "v": jnp.zeros((7, ps, kvh, dh))}
+    out_p, cp = attention_prefill(p, x, pool, num_heads=h, kv_heads=kvh,
+                                  head_dim=dh, page_table=tables)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_c),
+                               atol=1e-6)
+    for r in range(b):
+        for t in range(s):
+            np.testing.assert_allclose(
+                np.asarray(cp["k"][tables[r, t // ps], t % ps]),
+                np.asarray(cc["k"][r, t]), atol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(cp["v"][tables[r, t // ps], t % ps]),
+                np.asarray(cc["v"][r, t]), atol=1e-6)
 
 
 def test_attention_decode_paged_rejects_windows():
@@ -199,9 +286,110 @@ def test_engine_eos_retires_slot_and_readmits():
 
 
 def test_engine_stalls_loudly_when_pool_too_small():
+    """A pool that can never fit the head request must fail FAST — on the
+    first drained tick, not after burning max_ticks — and the error must
+    carry enough state (waiting queue, pool occupancy, page math) to
+    diagnose the sizing mistake."""
     cfg, dense, _ = _smoke_pair()
     eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
                         max_seq_len=16, num_pages=2)   # 1 usable page
     eng.submit(np.zeros(6, np.int32), 4)               # needs 3 pages
-    with pytest.raises(RuntimeError, match="stalled"):
-        eng.run()
+    with pytest.raises(RuntimeError, match="admission stalled") as ei:
+        eng.run(max_ticks=50_000)
+    assert eng.tick <= 1, "stall must be detected immediately"
+    msg = str(ei.value)
+    assert "needs 3 pages" in msg
+    assert "waiting" in msg and "pool=" in msg and "1/1 pages free" in msg
+
+
+# ---------------------------------------------------------------------------
+# Multi-tick on-device decode chunks (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+_SAMPLING_PALETTE = [
+    (0.0, None, None),             # greedy
+    (0.8, 5, None),                # temperature + top-k
+    (1.3, None, 0.9),              # temperature + nucleus
+    (0.9, 8, 0.95),                # everything at once
+]
+
+
+def _solo_sampled(cfg, params, prompt, gen, t, k, p, key, eos_id=None):
+    toks = jnp.asarray(prompt[None])
+    caches = init_caches(cfg, 1, toks.shape[1] + gen, jnp.float32)
+    logits, caches = lm_prefill(params, caches, {"tokens": toks}, cfg)
+    first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out, _ = lm_generate(params, caches, first,
+                         jnp.asarray(toks.shape[1], jnp.int32), gen, cfg,
+                         temperature=t, top_k=k, top_p=p, key=key,
+                         eos_id=eos_id)
+    return np.asarray(out)[0]
+
+
+@pytest.mark.parametrize("kind", ["dense", "packed"])
+def test_engine_fuzz_streams_bitmatch_solo(kind):
+    """Randomized arrival-trace differential fuzz: seeded random prompts,
+    arrival ticks, budgets and PER-SLOT sampling params, streamed through
+    the chunked engine at every ticks_per_sync — each request's stream
+    must be bit-identical to its solo ``lm_generate`` run (same per-slot
+    key derivation: fold_in(base, rid)).  Budget-exhausted rows freeze
+    mid-chunk (gen < 16 while ticks_per_sync = 16), so the done-mask path
+    is always exercised."""
+    cfg, dense_p, packed_p = _smoke_pair()
+    params = dense_p if kind == "dense" else packed_p
+    seed = 7 if kind == "dense" else 11
+    rng = np.random.default_rng(seed)
+    n = 6
+    lens = rng.integers(3, 10, size=n)
+    gens = rng.integers(2, 8, size=n)
+    arrivals = np.sort(rng.integers(0, 12, size=n))
+    samp = [_SAMPLING_PALETTE[i]
+            for i in rng.integers(0, len(_SAMPLING_PALETTE), size=n)]
+    prompts = [rng.integers(0, cfg.vocab, size=int(l)).astype(np.int32)
+               for l in lens]
+    base = jax.random.PRNGKey(5)
+    solos = {}
+    for tps in (1, 4, 16):
+        eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                            max_seq_len=24, ticks_per_sync=tps, seed=5)
+        rids = [eng.submit(pr, int(g), arrival=int(a), temperature=t,
+                           top_k=k, top_p=p)
+                for pr, g, a, (t, k, p)
+                in zip(prompts, gens, arrivals, samp)]
+        done = eng.run()
+        assert len(done) == n
+        for i, rid in enumerate(rids):
+            if rid not in solos:
+                t, k, p = samp[i]
+                solos[rid] = _solo_sampled(
+                    cfg, params, prompts[i], int(gens[i]), t, k, p,
+                    jax.random.fold_in(base, rid))
+            assert len(done[rid].tokens) == gens[i]
+            np.testing.assert_array_equal(
+                done[rid].tokens, solos[rid],
+                err_msg=f"{kind}/tps={tps}/request {rid}")
+        assert eng.pool.free_pages == eng.pool.num_pages - 1
+
+
+def test_engine_chunked_eos_freezes_midchunk_and_readmits():
+    """EOS inside a chunk: the row freezes mid-scan (its remaining chunk
+    ticks emit nothing), retires at the chunk boundary, and the freed
+    slot re-admits the queue head — tokens still match the solo decode."""
+    cfg, dense, _ = _smoke_pair()
+    rng = np.random.default_rng(1)
+    p0 = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    base = _solo(cfg, dense, p0, 6)
+    eos = int(base[2])                 # fires mid-chunk at ticks_per_sync=4
+    eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, eos_id=eos, ticks_per_sync=4)
+    eng.submit(p0, 6)
+    eng.submit(p1, 3)
+    done = eng.run()
+    want0 = _solo(cfg, dense, p0, 6, eos_id=eos)
+    stop = int(np.argmax(want0 == eos)) + 1 if (want0 == eos).any() else 6
+    np.testing.assert_array_equal(done[0].tokens, want0[:stop])
+    assert done[0].tokens[-1] == eos and len(done[0].tokens) < 6
+    np.testing.assert_array_equal(done[1].tokens,
+                                  _solo(cfg, dense, p1, 3, eos_id=eos))
+    assert done[1].admitted_at >= done[0].finished_at
