@@ -8,7 +8,7 @@ Times the two jitted serving calls (DESIGN.md §7/§8) — batched
     {"config": {...}, "dense_tok_s": ..., "packed_tok_s": ...,
      "dense_prefill_ms": ..., "packed_prefill_ms": ...,
      "prefill_speedup": ..., "decode_speedup": ...,
-     "continuous_batching": {...}}
+     "continuous_batching": {...}, "paged_attention": {...}}
 
 The ``continuous_batching`` section streams ragged requests through the
 paged-KV ``ServingEngine`` (DESIGN.md §9) — staggered arrivals,
@@ -31,6 +31,80 @@ import argparse
 import json
 import time
 from typing import Any, Dict
+
+
+def _bench_paged_attention(
+    *,
+    contexts=(128, 512, 2048),
+    page_size: int = 8,
+    batch: int = 4,
+    num_heads: int = 8,
+    kv_heads: int = 4,
+    head_dim: int = 64,
+    d_model: int = 512,
+    reps: int = 20,
+) -> Dict[str, Any]:
+    """Gather vs fused paged decode attention over a context-length sweep
+    (DESIGN.md §11).  One fixed-width page table sized for the longest
+    context; ``cache_len`` sweeps below it — so the legacy gather pays
+    its O(max_pages · page_size) view at every point while the fused
+    page walk pays O(cache_len).  Times the full ``attention_decode``
+    call (projections included) through one jit per impl."""
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.attention import attention_decode, attention_init
+
+    max_len = max(contexts)
+    max_pages = -(-max_len // page_size)
+    n_pages = batch * max_pages + 1
+    key = jax.random.PRNGKey(0)
+    p = attention_init(key, d_model, num_heads, kv_heads, head_dim)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (batch, 1, d_model))
+    pool_k = jax.random.normal(
+        jax.random.fold_in(key, 2), (n_pages, page_size, kv_heads, head_dim))
+    pool_v = jax.random.normal(
+        jax.random.fold_in(key, 3), (n_pages, page_size, kv_heads, head_dim))
+    tables = jnp.asarray(
+        np.random.default_rng(0).permutation(
+            np.arange(1, n_pages))[: batch * max_pages].reshape(
+                batch, max_pages), jnp.int32)
+
+    def make(impl):
+        def f(x, ck, cv, clen):
+            return attention_decode(
+                p, x, {"k": ck, "v": cv}, clen, num_heads=num_heads,
+                kv_heads=kv_heads, head_dim=head_dim, page_table=tables,
+                paged_impl=impl)
+        return jax.jit(f)
+
+    fns = {impl: make(impl) for impl in ("gather", "fused")}
+    by_ctx: Dict[str, Any] = {}
+    for ctx in contexts:
+        clen = jnp.full((batch,), ctx - 1, jnp.int32)  # +1 in-register token
+        row: Dict[str, Any] = {"context": ctx}
+        for impl, f in fns.items():
+            o, _ = f(x, pool_k, pool_v, clen)
+            jax.block_until_ready(o)                   # warm (compile once)
+            t0 = _time.perf_counter()
+            for _ in range(reps):
+                o, _ = f(x, pool_k, pool_v, clen)
+            jax.block_until_ready(o)
+            dt = max((_time.perf_counter() - t0) / reps, 1e-9)
+            row[f"{impl}_ms"] = dt * 1e3
+            row[f"{impl}_tok_s"] = batch / dt
+        row["speedup"] = row["gather_ms"] / max(row["fused_ms"], 1e-9)
+        by_ctx[str(ctx)] = row
+    longest = str(max(contexts))
+    return {
+        "page_size": page_size, "max_len": max_len, "batch": batch,
+        "num_heads": num_heads, "kv_heads": kv_heads, "head_dim": head_dim,
+        "by_context": by_ctx,
+        "speedup_at_longest": by_ctx[longest]["speedup"],
+    }
 
 
 def bench_serving(
@@ -168,6 +242,11 @@ def bench_serving(
         }
     else:
         cb = {"unsupported": "SWA window / encoder-decoder arch"}
+    # fused page-walk vs legacy gather decode attention over long contexts
+    # (independent of the smoke model above — fixed attention shapes, one
+    # table sized for the longest context).  check.sh gates fused >= gather
+    # at the longest swept context.
+    paged = _bench_paged_attention(reps=max(reps * 4, 8))
     return {
         "config": {
             "arch": cfg.name, "d_model": d_model, "d_ff": d_ff,
@@ -184,6 +263,7 @@ def bench_serving(
         "prefill_speedup": dense["prefill_ms"] / max(sparse["prefill_ms"], 1e-9),
         "decode_speedup": sparse["tok_s"] / max(dense["tok_s"], 1e-9),
         "continuous_batching": cb,
+        "paged_attention": paged,
     }
 
 
@@ -213,6 +293,14 @@ def main(quick: bool = False):
             f"packed@tps{cb['chunked_ticks_per_sync']}="
             f"{cb['chunked_packed_tok_s']:.0f}tok/s "
             f"({cb['chunked_speedup_vs_single_tick']:.2f}x)")
+    pa = r["paged_attention"]
+    longest = str(pa["max_len"])
+    row = pa["by_context"][longest]
+    lines.append(
+        f"serving_paged_attention,{row['fused_ms'] * 1e3:.0f},"
+        f"ctx{longest} fused={row['fused_tok_s']:.0f}tok/s "
+        f"gather={row['gather_tok_s']:.0f}tok/s "
+        f"({pa['speedup_at_longest']:.2f}x)")
     return lines
 
 
@@ -264,6 +352,10 @@ def cli() -> int:
               f"(best at ticks_per_sync={cb['chunked_ticks_per_sync']})")
     else:
         print(f"  stream: skipped ({cb['unsupported']})")
+    pa = result["paged_attention"]
+    for ctx, row in sorted(pa["by_context"].items(), key=lambda kv: int(kv[0])):
+        print(f"  paged[ctx={ctx:>5}]: gather {row['gather_ms']:7.2f}ms  "
+              f"fused {row['fused_ms']:7.2f}ms  ({row['speedup']:.2f}x)")
     print(f"  -> {args.out}")
     return 0
 

@@ -13,6 +13,7 @@ python -m pytest -q \
     tests/test_knapsack.py \
     tests/test_structures_masks.py \
     tests/test_kernels.py \
+    tests/test_paged_attention.py \
     tests/test_sparse_exec.py \
     tests/test_serve_equiv.py \
     tests/test_serving_engine.py \
@@ -27,6 +28,11 @@ python -m pytest -q \
 # collected") if these ever get renamed away — the gate fails loudly
 # instead of the tiling branch silently going dead.
 python -m pytest -q tests/test_kernels.py -k "interpret_grid_epilogue"
+
+# same contract for the fused paged-attention kernels (DESIGN.md §11):
+# the decode (M=1) and prefill (bm-tiled, M=64) page-walk grids must
+# keep running under the interpreter against the non-gathering ref
+python -m pytest -q tests/test_paged_attention.py -k "kernel_interpret"
 
 python examples/serve_pruned.py
 
@@ -80,8 +86,18 @@ tick1 = cb["by_ticks_per_sync"]["1"]["packed_tok_s"]
 tick4 = cb["by_ticks_per_sync"]["4"]["packed_tok_s"]
 assert tick4 > tick1, \
     f"chunked streamed decode lost to single-tick: {tick4:.0f} vs {tick1:.0f} tok/s"
+# fused paged-attention decode (DESIGN.md §11): the page walk must not
+# lose to the legacy O(max_len) gather even at the LONGEST swept context
+# (where both touch every live page — the fused win comes from never
+# materializing the logical view); at short contexts the O(cache_len)
+# scaling makes the margin much larger
+pa = r["paged_attention"]
+sp = pa["speedup_at_longest"]
+assert sp >= 1.0, \
+    f"fused paged decode lost to gather at ctx {pa['max_len']}: {sp:.2f}x"
 print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x, "
-      f"chunked stream {tick4 / tick1:.2f}x over single-tick OK")
+      f"chunked stream {tick4 / tick1:.2f}x over single-tick, "
+      f"fused paged decode {sp:.2f}x over gather at ctx {pa['max_len']} OK")
 PY
 
 echo "check.sh: OK"

@@ -73,6 +73,7 @@ class ModelConfig:
     seq_sharded_acts: bool = False          # Megatron-SP residual stream
     row_accum_dtype: str = "float32"        # row-parallel matmul psum dtype
     moe_impl: str = "gspmd"                 # gspmd | alltoall (shard_map EP)
+    paged_attn_impl: str = "fused"          # fused (page walk) | gather (view)
 
     # capability flags
     sub_quadratic: bool = False             # may run long_500k

@@ -28,12 +28,19 @@ import jax.numpy as jnp
 from repro.core.packing import BSRPlanes, BSRWeight
 from .block_sparse_matmul import bsr_matmul_pallas, bsr_planes_matmul_pallas
 from .epilogue import Epilogue, apply_epilogue, make_epilogue
+from .paged_attention import (
+    paged_attention_decode_pallas,
+    paged_attention_decode_ref,
+    paged_attention_prefill_pallas,
+    paged_attention_prefill_ref,
+)
 from .structure_norms import structure_norms_pallas
 from . import ref as _ref
 
 __all__ = [
     "Epilogue", "apply_epilogue", "make_epilogue",
     "bsr_matmul", "bsr_planes_matmul", "structure_norms", "on_tpu",
+    "paged_attention_decode", "paged_attention_prefill",
 ]
 
 
@@ -101,6 +108,56 @@ def bsr_planes_matmul(
             x3, planes, bm=bm, epilogue=epi, interpret=(mode == "interpret")
         )
     return y.reshape(e, *lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "pages_per_step"))
+def paged_attention_decode(
+    q: jnp.ndarray,            # (B, H, dh) — rotated query, new token
+    k_new: jnp.ndarray,        # (B, K, dh) — rotated K, new token (in-register)
+    v_new: jnp.ndarray,        # (B, K, dh)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh) physical pages
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,   # (B, max_pages) int32 pool ids
+    cache_len: jnp.ndarray,    # (B,) int32 — #prior tokens
+    *,
+    mode: str = "auto",
+    pages_per_step: int = 8,   # ref-path segment width (perf only)
+) -> jnp.ndarray:
+    """Fused paged decode attention: walks ``page_table`` with an online
+    softmax, O(cache_len) work/traffic, no logical-view gather.  The new
+    token's K/V never round-trips through the pool — it seeds the
+    accumulator in-register.  Returns (B, H, dh) fp32."""
+    if _use_ref(mode):
+        return paged_attention_decode_ref(
+            q, k_new, v_new, k_pool, v_pool, page_table, cache_len,
+            pages_per_step=pages_per_step)
+    return paged_attention_decode_pallas(
+        q, k_new, v_new, k_pool, v_pool, page_table, cache_len,
+        interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "mode", "pages_per_step"))
+def paged_attention_prefill(
+    q: jnp.ndarray,            # (B, S, H, dh) — rotated, positions [0, S)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh) — prompt K/V already
+    v_pool: jnp.ndarray,       #   scattered into the rows' pages
+    page_table: jnp.ndarray,   # (B, max_pages) int32
+    lengths: jnp.ndarray,      # (B,) int32 per-row prompt length (<= S)
+    *,
+    bm: int = 64,              # Pallas query-tile rows
+    mode: str = "auto",
+    pages_per_step: int = 8,
+) -> jnp.ndarray:
+    """Causal paged prefill attention over the same page walk (bm-tiled
+    query blocks in the Pallas kernel).  Rows past ``lengths`` produce
+    zeros.  Returns (B, S, H, dh) fp32."""
+    if _use_ref(mode):
+        return paged_attention_prefill_ref(
+            q, k_pool, v_pool, page_table, lengths,
+            pages_per_step=pages_per_step)
+    return paged_attention_prefill_pallas(
+        q, k_pool, v_pool, page_table, lengths, bm=bm,
+        interpret=(mode == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "bn", "mode"))

@@ -1,0 +1,434 @@
+"""Fused paged-attention kernels: walk the page table, never gather.
+
+The serving pool stores every sequence's KV in fixed-size pages
+``(num_pages, page_size, K, dh)`` with a per-row table of page ids
+(serving/pages.py, DESIGN.md §9).  The naive decode path materializes the
+logical view first — ``pool[page_table].reshape(b, max_len, K, dh)`` —
+so every token pays O(max_pages · page_size) memory traffic no matter
+how short the row's real context is.  These kernels instead *walk* the
+table: grid over (batch, kv_head), inner loop over pages, an
+online-softmax accumulator carried across pages, and the just-computed
+current token's K/V kept in-register (it seeds the accumulator and never
+round-trips through the pool).  Work and traffic scale with the live
+``cache_len``, not the allocation — the same locality argument the
+paper makes for structured pruning: compression only pays when the
+kernel respects the memory layout.
+
+Online-softmax recurrence per page (all fp32):
+
+    m2  = max(m, max_s(scores))          # running max
+    r   = exp(m - m2)                    # rescale factor for old state
+    p   = where(valid, exp(s - m2), 0)   # page probabilities (unnormed)
+    l   = l·r + Σ_s p                    # running normalizer
+    acc = acc·r + p @ V_page             # running weighted values
+    out = acc / l                        # after the last page
+
+Decode seeds the state with the in-register current token — ``m = s_new,
+l = 1, acc = v_new`` — so every row has a non-empty softmax even at
+``cache_len == 0`` (a free slot parked on the null page).
+
+Two backends behind ``ops.paged_attention_decode`` / ``_prefill``:
+
+* ``*_ref``    — pure-jnp, but still **non-gathering**: a
+  ``fori_loop`` over page *segments* bounded by ``max(cache_len)``, so
+  CPU serving gets the same work-scales-with-context contract as the
+  TPU kernel (and stays bit-comparable to it at ``pages_per_step=1`` —
+  the ref mirrors the kernel's op sequence exactly).
+* ``*_pallas`` — the TPU kernel; ``interpret=True`` runs the same body
+  on CPU for CI.  Page ids are scalar-prefetched (SMEM) and the pool
+  BlockSpec index map clamps dead steps to the last live page, so a
+  revisited block index skips the DMA — traffic is O(cache_len) even
+  though the grid is statically sized by the table width.
+
+Masked positions never touch values: scores get the finite ``NEG_INF``
+sentinel *and* the value contribution is zeroed (``p`` is where-masked),
+so NaN poison in unallocated pages (the null page, freed pages) cannot
+leak through a ``0 · NaN`` in the value contraction.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "paged_attention_decode_ref",
+    "paged_attention_decode_pallas",
+    "paged_attention_prefill_ref",
+    "paged_attention_prefill_pallas",
+]
+
+NEG_INF = -1e30  # finite mask sentinel (matches models/attention.py)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one query token per row over [0, cache_len) pool positions
+# ---------------------------------------------------------------------------
+
+def paged_attention_decode_ref(
+    q: jnp.ndarray,            # (B, H, dh) — rotated query for the new token
+    k_new: jnp.ndarray,        # (B, K, dh) — rotated K of the new token
+    v_new: jnp.ndarray,        # (B, K, dh)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh) physical pages
+    v_pool: jnp.ndarray,       # (P, page_size, K, dh)
+    page_table: jnp.ndarray,   # (B, max_pages) int32 pool ids
+    cache_len: jnp.ndarray,    # (B,) int32 — #prior tokens (new token excluded)
+    *,
+    pages_per_step: int = 8,
+) -> jnp.ndarray:
+    """Non-gathering reference: page-segment ``fori_loop`` bounded by
+    ``max(cache_len)``, online softmax across segments.  Returns
+    (B, H, dh) fp32.  ``pages_per_step=1`` is bit-comparable to the
+    Pallas kernel (same op order per page); larger segments amortize the
+    loop on CPU and stay within float rounding of it."""
+    b, h, dh = q.shape
+    kvh = k_new.shape[1]
+    g = h // kvh
+    ps = k_pool.shape[1]
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, kvh, g, dh).astype(jnp.float32)
+    kn = k_new.astype(jnp.float32)
+    vn = v_new.astype(jnp.float32)
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+
+    # the in-register current token seeds the state (its own score is the
+    # first max, so exp(s_new - m) = 1): m = s_new, l = 1, acc = v_new —
+    # the same seed the Pallas kernel uses, keeping the two bit-comparable
+    s_new = jnp.sum(qg * kn[:, :, None, :], axis=-1, keepdims=True) * scale
+    m0 = s_new                                              # (B,K,G,1)
+    l0 = jnp.ones_like(s_new)
+    acc0 = jnp.broadcast_to(vn[:, :, None, :], (b, kvh, g, dh)).astype(
+        jnp.float32)
+
+    seg = pages_per_step * ps                               # positions / step
+    offs = jnp.arange(ps, dtype=jnp.int32)
+    page_idx = jnp.arange(pages_per_step, dtype=jnp.int32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        idx = j * pages_per_step + page_idx                 # logical pages
+        # clip the *lookup* (labels stay logical): positions past the
+        # table are masked below, never mislabeled
+        pid = jnp.take(page_table, jnp.minimum(idx, max_pages - 1), axis=1)
+        kp = k_pool[pid].reshape(b, seg, kvh, dh).astype(jnp.float32)
+        vp = v_pool[pid].reshape(b, seg, kvh, dh).astype(jnp.float32)
+        pos = (idx[:, None] * ps + offs[None, :]).reshape(seg)
+        valid = (pos[None, :] < clen[:, None]) & (pos[None, :] < max_pages * ps)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, kp,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        # zero masked values too: unallocated pages may hold anything
+        # (NaN-poisoned in tests) and 0 · NaN = NaN in the contraction
+        vp = jnp.where(valid[:, :, None, None], vp, 0.0)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        r = jnp.exp(m - m2)
+        p = jnp.where(valid[:, None, None, :], jnp.exp(s - m2), 0.0)
+        l = l * r + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * r + jnp.einsum(
+            "bkgs,bskd->bkgd", p, vp, preferred_element_type=jnp.float32)
+        return m2, l, acc
+
+    n_steps = (jnp.max(clen) + seg - 1) // seg
+    m, l, acc = jax.lax.fori_loop(0, n_steps, body, (m0, l0, acc0))
+    return (acc / l).reshape(b, h, dh)
+
+
+def _decode_kernel(tbl_ref, clen_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
+                   o_ref, m_ref, l_ref, acc_ref, *, page_size: int,
+                   scale: float):
+    """Grid (B, K, max_pages); scratch m/l/acc persists across the
+    innermost page dimension.  j == 0 seeds from the in-register current
+    token; dead pages (j·ps >= cache_len) are skipped; the last step
+    normalizes into the output block."""
+    bb = pl.program_id(0)
+    j = pl.program_id(2)
+    clen = clen_ref[bb]
+    qg = q_ref[0, 0].astype(jnp.float32)                    # (G, dh)
+
+    @pl.when(j == 0)
+    def _seed():
+        kn = kn_ref[0, 0].astype(jnp.float32)               # (dh,)
+        s_new = jnp.sum(qg * kn[None, :], axis=-1, keepdims=True) * scale
+        m_ref[...] = s_new                                  # (G, 1)
+        l_ref[...] = jnp.ones_like(s_new)
+        acc_ref[...] = jnp.broadcast_to(
+            vn_ref[0, 0].astype(jnp.float32)[None, :], acc_ref.shape)
+
+    @pl.when(j * page_size < clen)
+    def _page():
+        kp = kp_ref[0, :, 0, :].astype(jnp.float32)         # (ps, dh)
+        vp = vp_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qg, kp, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (G, ps)
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        valid = pos < clen                                  # (1, ps)
+        s = jnp.where(valid, s, NEG_INF)
+        vp = jnp.where(valid.reshape(page_size, 1), vp, 0.0)
+        m = m_ref[...]
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        r = jnp.exp(m - m2)
+        p = jnp.where(valid, jnp.exp(s - m2), 0.0)
+        l_ref[...] = l_ref[...] * r + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * r + jnp.dot(
+            p, vp, preferred_element_type=jnp.float32)
+        m_ref[...] = m2
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+def paged_attention_decode_pallas(
+    q: jnp.ndarray,            # (B, H, dh)
+    k_new: jnp.ndarray,        # (B, K, dh)
+    v_new: jnp.ndarray,        # (B, K, dh)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh)
+    v_pool: jnp.ndarray,       # (P, page_size, K, dh)
+    page_table: jnp.ndarray,   # (B, max_pages) int32
+    cache_len: jnp.ndarray,    # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    kvh = k_new.shape[1]
+    g = h // kvh
+    ps = k_pool.shape[1]
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, kvh, g, dh)
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+
+    def pool_map(bb, k, j, tbl, cl):
+        # clamp dead steps to the last live page: a repeated block index
+        # skips the DMA, so traffic is O(cache_len) not O(max_pages)
+        live = (cl[bb] + ps - 1) // ps
+        jj = jnp.minimum(j, jnp.maximum(live - 1, 0))
+        return (tbl[bb, jj], 0, k, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bb, k, j, tbl, cl: (bb, k, 0, 0)),
+            pl.BlockSpec((1, 1, dh), lambda bb, k, j, tbl, cl: (bb, k, 0)),
+            pl.BlockSpec((1, 1, dh), lambda bb, k, j, tbl, cl: (bb, k, 0)),
+            pl.BlockSpec((1, ps, 1, dh), pool_map),
+            pl.BlockSpec((1, ps, 1, dh), pool_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, dh), lambda bb, k, j, tbl, cl: (bb, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running normalizer l
+            pltpu.VMEM((g, dh), jnp.float32),    # fp32 output accumulator
+        ],
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, page_size=ps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(page_table, clen, qg, k_new, v_new, k_pool, v_pool)
+    return out.reshape(b, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: bm-tiled query blocks over the same page walk, causal mask
+# ---------------------------------------------------------------------------
+
+def paged_attention_prefill_ref(
+    q: jnp.ndarray,            # (B, S, H, dh) — rotated, positions [0, S)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh) — prompt K/V scattered in
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,   # (B, max_pages) int32
+    lengths: jnp.ndarray,      # (B,) int32 — per-row prompt length (<= S)
+    *,
+    pages_per_step: int = 8,
+) -> jnp.ndarray:
+    """Causal paged prefill reference: same page-segment walk as decode,
+    vectorized over all S query rows.  Rows at/past their ``lengths`` get
+    zero output.  Returns (B, S, H, dh) fp32."""
+    b, s, h, dh = q.shape
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    ps = k_pool.shape[1]
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, s, kvh, g, dh).transpose(0, 2, 3, 1, 4).astype(
+        jnp.float32)                                        # (B,K,G,S,dh)
+    ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+
+    m0 = jnp.full((b, kvh, g, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s, 1), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, s, dh), jnp.float32)
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    seg = pages_per_step * ps
+    offs = jnp.arange(ps, dtype=jnp.int32)
+    page_idx = jnp.arange(pages_per_step, dtype=jnp.int32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        idx = j * pages_per_step + page_idx
+        pid = jnp.take(page_table, jnp.minimum(idx, max_pages - 1), axis=1)
+        kp = k_pool[pid].reshape(b, seg, kvh, dh).astype(jnp.float32)
+        vp = v_pool[pid].reshape(b, seg, kvh, dh).astype(jnp.float32)
+        kvpos = (idx[:, None] * ps + offs[None, :]).reshape(seg)
+        # (B, S, seg): causal x per-row length, labels stay logical
+        valid = ((kvpos[None, None, :] <= qpos[None, :, None])
+                 & (kvpos[None, None, :] < ln[:, None, None])
+                 & (qpos[None, :, None] < ln[:, None, None]))
+        kv_live = kvpos[None, :] < ln[:, None]              # (B, seg)
+        sb = jnp.einsum("bkgqd,bskd->bkgqs", qg, kp,
+                        preferred_element_type=jnp.float32) * scale
+        sb = jnp.where(valid[:, None, None], sb, NEG_INF)
+        vp = jnp.where(kv_live[:, :, None, None], vp, 0.0)
+        m2 = jnp.maximum(m, jnp.max(sb, axis=-1, keepdims=True))
+        r = jnp.exp(m - m2)
+        p = jnp.where(valid[:, None, None], jnp.exp(sb - m2), 0.0)
+        l = l * r + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * r + jnp.einsum("bkgqs,bskd->bkgqd", p, vp,
+                                   preferred_element_type=jnp.float32)
+        return m2, l, acc
+
+    n_steps = _cdiv(_cdiv(s, ps), pages_per_step)
+    m, l, acc = jax.lax.fori_loop(0, n_steps, body, (m0, l0, acc0))
+    out = acc / jnp.where(l == 0.0, 1.0, l)                 # dead rows -> 0
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
+
+
+def _prefill_kernel(tbl_ref, len_ref, q_ref, kp_ref, vp_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, page_size: int, block_q: int,
+                    group: int, scale: float):
+    """Grid (B, K, q_tiles, pages), pages innermost.  Query rows are laid
+    out (bm·G, dh) so one dot covers the whole GQA group; the causal mask
+    is built from 2D iotas (qpos = row // G, kvpos = page offset)."""
+    bb = pl.program_id(0)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    ln = len_ref[bb]
+
+    @pl.when(j == 0)
+    def _seed():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # pages needed by this q tile: kvpos <= qpos < min(len, (i+1)·bm)
+    qhi = jnp.minimum(ln, (i + 1) * block_q)
+
+    @pl.when(j * page_size < qhi)
+    def _page():
+        dh = acc_ref.shape[-1]
+        qg = q_ref[0, 0].astype(jnp.float32).reshape(block_q * group, dh)
+        kp = kp_ref[0, :, 0, :].astype(jnp.float32)         # (ps, dh)
+        vp = vp_ref[0, :, 0, :].astype(jnp.float32)
+        sb = jax.lax.dot_general(
+            qg, kp, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bm·G, ps)
+        shp = (block_q * group, page_size)
+        qpos = (i * block_q
+                + jax.lax.broadcasted_iota(jnp.int32, shp, 0) // group)
+        kvpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, shp, 1)
+        valid = (kvpos <= qpos) & (kvpos < ln) & (qpos < ln)
+        sb = jnp.where(valid, sb, NEG_INF)
+        kv_live = (j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (page_size, 1), 0)) < ln
+        vp = jnp.where(kv_live, vp, 0.0)
+        m = m_ref[...]
+        m2 = jnp.maximum(m, jnp.max(sb, axis=-1, keepdims=True))
+        r = jnp.exp(m - m2)
+        p = jnp.where(valid, jnp.exp(sb - m2), 0.0)
+        l_ref[...] = l_ref[...] * r + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * r + jnp.dot(
+            p, vp, preferred_element_type=jnp.float32)
+        m_ref[...] = m2
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).reshape(
+            o_ref.shape[2:])
+
+
+def paged_attention_prefill_pallas(
+    q: jnp.ndarray,            # (B, S, H, dh)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh)
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,   # (B, max_pages) int32
+    lengths: jnp.ndarray,      # (B,) int32
+    *,
+    bm: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    ps = k_pool.shape[1]
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    bm = min(bm, s)
+    s_pad = _cdiv(s, bm) * bm
+    n_qt = s_pad // bm
+    n_pg = _cdiv(s, ps)                                     # prompt pages only
+    ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+
+    qt = q.reshape(b, s, kvh, g, dh).transpose(0, 2, 1, 3, 4)  # (B,K,S,G,dh)
+    if s_pad != s:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    def pool_map(bb, k, i, j, tbl, cl):
+        live = (jnp.minimum(cl[bb], (i + 1) * bm) + ps - 1) // ps
+        jj = jnp.minimum(j, jnp.maximum(live - 1, 0))
+        return (tbl[bb, jj], 0, k, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_qt, n_pg),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, g, dh),
+                         lambda bb, k, i, j, tbl, cl: (bb, k, i, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dh), pool_map),
+            pl.BlockSpec((1, ps, 1, dh), pool_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bm, g, dh), lambda bb, k, i, j, tbl, cl: (bb, k, i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bm * g, 1), jnp.float32),
+            pltpu.VMEM((bm * g, 1), jnp.float32),
+            pltpu.VMEM((bm * g, dh), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        )
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, page_size=ps, block_q=bm,
+                          group=g, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, s_pad, g, dh), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(page_table, ln, qt, k_pool, v_pool)
+    return out[:, :, :s].transpose(0, 2, 1, 3, 4).reshape(b, s, h, dh)

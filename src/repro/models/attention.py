@@ -23,6 +23,8 @@ import jax.numpy as jnp
 
 from repro.core.packing import BSRWeight
 from repro.distributed.sharding import logical_constraint
+from repro.kernels.ops import paged_attention_decode as _paged_decode_op
+from repro.kernels.ops import paged_attention_prefill as _paged_prefill_op
 from .layers import apply_mrope, apply_rope, dense, dense_init
 
 __all__ = [
@@ -201,6 +203,7 @@ def attention_prefill(
     accum=None,
     out_seq: str = "seq",
     page_table: Optional[jnp.ndarray] = None,   # (B, max_pages) -> pool ids
+    paged_impl: str = "fused",                  # fused (page walk) | gather
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Batched causal prefill that also fills the KV cache.
 
@@ -213,12 +216,21 @@ def attention_prefill(
 
     With ``page_table`` the cache is a ``(num_pages, page_size, K, dh)``
     pool (DESIGN.md §9/§10): token ``t`` of row ``b`` is scattered
-    straight into ``pool[table[b, t // ps], t % ps]`` — no contiguous
-    intermediate cache, so a serving engine can prefill directly into
-    the pages the request owns.  Ring (SWA) caches are not paged."""
+    straight into ``pool[table[b, t // ps], t % ps]``, then attention
+    runs *over the pages themselves* with the fused bm-tiled page-walk
+    kernel (kernels/paged_attention.py, DESIGN.md §11) — no contiguous
+    logical view is ever materialized.  ``paged_impl="gather"`` keeps
+    the legacy path (attention over the fresh contiguous K/V) for
+    differential tests.  Ring (SWA) caches are not paged."""
     accum = accum or jnp.float32
     if page_table is not None and window is not None:
-        raise ValueError("paged KV caches do not support SWA/ring windows")
+        raise NotImplementedError(
+            "attention_prefill: sliding-window attention over a paged KV "
+            f"cache is not implemented (window={window} with page_table) — "
+            "SWA uses contiguous ring caches (DESIGN.md §9); drop the "
+            "window or use a contiguous cache")
+    if paged_impl not in ("fused", "gather"):
+        raise ValueError(f"unknown paged_impl {paged_impl!r}")
     b, s, _ = x.shape
     q = _split_heads(dense(p["wq"], x), num_heads)
     k = _split_heads(dense(p["wk"], x), kv_heads)
@@ -235,10 +247,6 @@ def attention_prefill(
             q = apply_rope(q, positions, theta=rope_theta)
             k = apply_rope(k, positions, theta=rope_theta)
 
-    o = chunked_causal_attention(q, k, v, causal=True, window=window, chunk=chunk)
-    out = _wo_project(p, o, num_heads, head_dim, accum, x.dtype)
-    out = logical_constraint(out, "batch", out_seq, "embed")
-
     alloc = cache["k"].shape[1]
     kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
     if page_table is not None:
@@ -248,13 +256,29 @@ def attention_prefill(
         off = jnp.broadcast_to(t % ps, (b, s))
         ck = cache["k"].at[pid, off].set(kc)
         cv = cache["v"].at[pid, off].set(vc)
+        if paged_impl == "fused":
+            # attend straight over the just-written pages: the fused
+            # kernel walks this row's table, so other sequences' pages
+            # (and unallocated ones) are never touched
+            o = _paged_prefill_op(
+                q, ck, cv, page_table, jnp.full((b,), s, jnp.int32),
+                bm=min(chunk, s)).astype(x.dtype)
+        else:
+            o = chunked_causal_attention(q, k, v, causal=True, window=None,
+                                         chunk=chunk)
     elif s <= alloc:
         ck = jax.lax.dynamic_update_slice(cache["k"], kc, (0, 0, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], vc, (0, 0, 0, 0))
+        o = chunked_causal_attention(q, k, v, causal=True, window=window,
+                                     chunk=chunk)
     else:  # ring: keep the last `alloc` tokens at their decode slots
         slots = jnp.arange(s - alloc, s) % alloc
         ck = cache["k"].at[:, slots].set(kc[:, s - alloc:])
         cv = cache["v"].at[:, slots].set(vc[:, s - alloc:])
+        o = chunked_causal_attention(q, k, v, causal=True, window=window,
+                                     chunk=chunk)
+    out = _wo_project(p, o, num_heads, head_dim, accum, x.dtype)
+    out = logical_constraint(out, "batch", out_seq, "embed")
     return out, {**cache, "k": ck, "v": cv}
 
 
@@ -305,6 +329,7 @@ def attention_decode(
     use_rope: bool = True,
     update_cache: bool = True,
     page_table: Optional[jnp.ndarray] = None,   # (B, max_pages) -> pool ids
+    paged_impl: str = "fused",                  # fused (page walk) | gather
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One-token decode over a (possibly seq-sharded) KV cache.
 
@@ -319,8 +344,12 @@ def attention_decode(
     sequences, and row ``b`` reads/writes the logical slots named by
     ``page_table[b]`` (DESIGN.md §9).  The new token lands at page
     ``cache_len // page_size``, offset ``cache_len % page_size`` of its
-    own table; the attention view is a pages gather reshaped back to one
-    logical sequence.  Ring (SWA) caches are not paged.
+    own table.  The default ``paged_impl="fused"`` attends by *walking*
+    the table with an online softmax (kernels/paged_attention.py,
+    DESIGN.md §11) — O(cache_len) traffic, the new token's K/V stays
+    in-register; ``"gather"`` keeps the legacy logical-view gather
+    (O(max_pages · page_size) traffic) for differential tests and
+    benchmarks.  Ring (SWA) caches are not paged.
 
     With the cache's seq dim sharded ("kv_seq"), GSPMD lowers the softmax
     to partial stats + all-reduce — the flash-decode pattern.
@@ -330,9 +359,17 @@ def attention_decode(
     cache_len = jnp.broadcast_to(
         jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
     paged = page_table is not None
-    if paged and (window is not None or not update_cache):
-        raise ValueError("paged KV caches do not support SWA/ring windows "
-                         "or cross-attention reads")
+    if paged and window is not None:
+        raise NotImplementedError(
+            "attention_decode: sliding-window attention over a paged KV "
+            f"cache is not implemented (window={window} with page_table) — "
+            "SWA uses contiguous ring caches (DESIGN.md §9); drop the "
+            "window or use a contiguous cache")
+    if paged and not update_cache:
+        raise ValueError("paged KV caches do not support cross-attention "
+                         "reads")
+    if paged_impl not in ("fused", "gather"):
+        raise ValueError(f"unknown paged_impl {paged_impl!r}")
     page_size = cache["k"].shape[1]
     max_len = page_table.shape[1] * page_size if paged else cache["k"].shape[1]
     ring = (not paged) and window is not None and max_len <= window
@@ -368,6 +405,16 @@ def attention_decode(
         cache = {"k": ck, "v": cv}
     else:  # cross-attention: cache holds encoder K/V, no rope on q
         pass
+    if paged and paged_impl == "fused":
+        # walk the page table with an online softmax — no logical view,
+        # O(cache_len) traffic; the rotated new-token K/V seeds the
+        # accumulator in-register instead of round-tripping via the pool
+        o32 = _paged_decode_op(
+            q[:, 0], knew[:, 0], vnew[:, 0], cache["k"], cache["v"],
+            page_table, cache_len)
+        o = dense(p["wo"], o32.astype(x.dtype).reshape(
+            b, 1, num_heads * head_dim))
+        return o, cache
     if paged:
         # pages gather: (B, max_pages, page, K, dh) -> (B, S_logical, K, dh)
         ck = cache["k"][page_table].reshape(b, max_len, kv_heads, head_dim)
@@ -392,6 +439,12 @@ def attention_decode(
         if window is not None:
             valid &= kpos > clen - window
     scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    if paged:
+        # unallocated pages may hold anything (the null page is
+        # NaN-poisoned in tests): a NEG_INF score zeroes the softmax
+        # weight, but 0 * NaN = NaN in the value contraction — zero the
+        # gathered V at dead positions too (a no-op for finite data)
+        cv = jnp.where(valid[:, :, None, None], cv, 0)
     w = jax.nn.softmax(scores, axis=-1)
     o = _gqa_values(w, cv).astype(x.dtype)                  # (B,1,K,G,dh)
     o = dense(p["wo"], o.reshape(b, 1, num_heads * head_dim))

@@ -465,6 +465,7 @@ def lm_decode(
                 head_dim=cfg.head_dim_(), window=cfg.window,
                 rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
                 use_rope=spec.use_rope, page_table=page_tables,
+                paged_impl=cfg.paged_attn_impl,
             )
             cache = {**cache, **cache2}
             if spec.cross_attn:
@@ -565,6 +566,7 @@ def lm_prefill(
                 rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
                 use_rope=spec.use_rope, accum=_accum(cfg),
                 out_seq=_out_seq(cfg), page_table=page_tables,
+                paged_impl=cfg.paged_attn_impl,
             )
             if spec.cross_attn:
                 xc = _norm_apply(cfg, lp["cross_norm"], x + h)

@@ -1,0 +1,243 @@
+"""Fused paged-attention kernels (kernels/paged_attention.py, DESIGN.md §11).
+
+Three-way differential coverage: the Pallas kernel body (interpret mode,
+decode M=1 and prefill bm-tiled grids) against the non-gathering ref,
+the ref against a dense gather oracle, and the ``attention_decode`` /
+``attention_prefill`` fused dispatch against the legacy gather path —
+across ragged ``(B,)`` cache_len (including empty rows parked on the
+null page), GQA ratios, and page sizes 4/8/16.
+
+The ref mirrors the kernel's op sequence exactly (same seed, same
+per-page update order), so kernel-vs-ref agreement is at float32
+rounding (1–2 ulp from einsum batching), not accumulated drift.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import paged_attention_decode, paged_attention_prefill
+from repro.kernels.paged_attention import (
+    paged_attention_decode_pallas,
+    paged_attention_decode_ref,
+    paged_attention_prefill_pallas,
+    paged_attention_prefill_ref,
+)
+from repro.models.attention import attention_decode, attention_init, full_attention
+
+ATOL = 2e-6
+
+
+def _mk_decode(rng, b, h, kvh, dh, ps, max_pages, clens, poison=False):
+    """Random decode case: shuffled non-null page ids per live row; rows
+    with cache_len 0 park their whole table on the null page.  With
+    ``poison`` every slot not owned by a live row is NaN."""
+    n_pages = b * max_pages + 1
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, kvh, dh)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, kvh, dh)), jnp.float32)
+    clens = np.asarray(clens)
+    ids = rng.permutation(np.arange(1, n_pages))[: b * max_pages]
+    tbl = np.where(clens[:, None] == 0, 0, ids.reshape(b, max_pages))
+    if poison:
+        kp = np.full((n_pages, ps, kvh, dh), np.nan, np.float32)
+        vp = np.full((n_pages, ps, kvh, dh), np.nan, np.float32)
+        for r in range(b):                    # only live positions are real
+            for t in range(int(clens[r])):
+                kp[tbl[r, t // ps], t % ps] = rng.normal(size=(kvh, dh))
+                vp[tbl[r, t // ps], t % ps] = rng.normal(size=(kvh, dh))
+        kp, vp = jnp.asarray(kp), jnp.asarray(vp)
+    else:
+        kp = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh)), jnp.float32)
+    return (q, kn, vn, kp, vp, jnp.asarray(tbl, jnp.int32),
+            jnp.asarray(clens, jnp.int32))
+
+
+def _decode_oracle(q, kn, vn, kp, vp, tbl, clen):
+    """Dense gather + monolithic softmax, the new token appended at its
+    row's cache_len — the legacy view the kernel must reproduce."""
+    b, h, dh = q.shape
+    kvh = kn.shape[1]
+    g = h // kvh
+    ps = kp.shape[1]
+    s_max = tbl.shape[1] * ps
+    ck = np.array(kp[tbl].reshape(b, s_max, kvh, dh))
+    cv = np.array(vp[tbl].reshape(b, s_max, kvh, dh))
+    for r in range(b):
+        c = int(clen[r])
+        ck[r, c] = np.asarray(kn[r])
+        cv[r, c] = np.asarray(vn[r])
+    qg = np.asarray(q).reshape(b, kvh, g, dh)
+    s = np.einsum("bkgd,bskd->bkgs", qg, ck) / np.sqrt(dh)
+    valid = np.arange(s_max)[None] <= np.asarray(clen)[:, None]
+    s = np.where(valid[:, None, None], s, -1e30)
+    w = np.exp(s - s.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    cv = np.where(valid[:, :, None, None], cv, 0)
+    return np.einsum("bkgs,bskd->bkgd", w, cv).reshape(b, h, dh)
+
+
+@pytest.mark.parametrize("ps", [4, 8, 16])
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (4, 1)])
+def test_paged_decode_kernel_interpret_matches_ref(ps, h, kvh):
+    """Decode-grid (M=1) kernel body under the interpreter vs the
+    page-per-step ref: same op order, float-rounding agreement, across
+    ragged cache_len including an empty row on the null page."""
+    rng = np.random.default_rng(ps * 10 + h)
+    b, dh, mp = 4, 32, 5
+    clens = [0, 1, ps * mp - 1, int(rng.integers(1, ps * mp - 1))]
+    args = _mk_decode(rng, b, h, kvh, dh, ps, mp, clens)
+    ref = paged_attention_decode_ref(*args, pages_per_step=1)
+    ker = paged_attention_decode_pallas(*args, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=ATOL)
+    orc = _decode_oracle(*args)
+    np.testing.assert_allclose(np.asarray(ref), orc, atol=1e-5)
+
+
+def test_paged_decode_ref_segment_width_invariant():
+    """The ref's pages_per_step is a CPU throughput knob, not semantics:
+    any width agrees with the per-page walk to float rounding."""
+    rng = np.random.default_rng(3)
+    args = _mk_decode(rng, 3, 8, 4, 64, 8, 6, [0, 17, 47])
+    base = paged_attention_decode_ref(*args, pages_per_step=1)
+    for pps in (2, 4, 8):
+        got = paged_attention_decode_ref(*args, pages_per_step=pps)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   atol=ATOL)
+
+
+def test_paged_decode_never_reads_unallocated_pages():
+    """NaN-poison every slot outside the live prefix of each row's own
+    pages (including the whole null page): outputs must be finite and
+    bit-identical to the clean-pool run on ref AND interpret kernel."""
+    rng = np.random.default_rng(5)
+    b, h, kvh, dh, ps, mp = 3, 8, 4, 32, 4, 4
+    clens = [0, 5, 13]
+    dirty = _mk_decode(np.random.default_rng(5), b, h, kvh, dh, ps, mp,
+                       clens, poison=True)
+    # clean pool: identical live data, zeros elsewhere
+    clean = tuple(jnp.nan_to_num(a, nan=0.0) if a.ndim == 4 else a
+                  for a in dirty)
+    for fn in (lambda *a: paged_attention_decode_ref(*a, pages_per_step=2),
+               lambda *a: paged_attention_decode_pallas(*a, interpret=True)):
+        got = np.asarray(fn(*dirty))
+        assert np.isfinite(got).all()
+        np.testing.assert_array_equal(got, np.asarray(fn(*clean)))
+
+
+def test_paged_decode_ops_mode_dispatch():
+    rng = np.random.default_rng(7)
+    args = _mk_decode(rng, 2, 4, 2, 16, 8, 3, [0, 11])
+    ref = paged_attention_decode(*args, mode="ref")
+    itp = paged_attention_decode(*args, mode="interpret")
+    auto = paged_attention_decode(*args, mode="auto")   # CPU host -> ref
+    np.testing.assert_allclose(np.asarray(itp), np.asarray(ref), atol=ATOL)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(ref))
+    with pytest.raises(ValueError, match="unknown kernel mode"):
+        paged_attention_decode(*args, mode="bogus")
+
+
+def test_attention_decode_fused_matches_gather_impl():
+    """The dispatch-level contract: attention_decode with the fused page
+    walk == the legacy gather view, per row, over ragged cache_len —
+    including the cache writes (shared between impls)."""
+    rng = np.random.default_rng(11)
+    b, ps, mp, kvh, h, dh, d = 3, 4, 4, 2, 4, 16, 64
+    key = jax.random.PRNGKey(0)
+    p = attention_init(key, d, h, kvh, dh)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, 1, d))
+    n_pages = b * mp + 1
+    pool = {
+        "k": jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh)), jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh)), jnp.float32),
+    }
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages))[: b * mp].reshape(b, mp),
+        jnp.int32)
+    clen = jnp.asarray([0, 7, 14], jnp.int32)
+    out_f, cf = attention_decode(p, x, dict(pool), clen, num_heads=h,
+                                 kv_heads=kvh, head_dim=dh,
+                                 page_table=tables, paged_impl="fused")
+    out_g, cg = attention_decode(p, x, dict(pool), clen, num_heads=h,
+                                 kv_heads=kvh, head_dim=dh,
+                                 page_table=tables, paged_impl="gather")
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_g),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cf["k"]), np.asarray(cg["k"]))
+    np.testing.assert_array_equal(np.asarray(cf["v"]), np.asarray(cg["v"]))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _mk_prefill(rng, b, s, h, kvh, dh, ps):
+    """Prompt K/V scattered into shuffled pages; everything the scatter
+    didn't touch stays NaN, so any stray read is loud."""
+    mp = -(-s // ps)
+    n_pages = b * mp + 1
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, dh)), jnp.float32)
+    tbl = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages)).reshape(b, mp), jnp.int32)
+    kp = jnp.full((n_pages, ps, kvh, dh), jnp.nan, jnp.float32)
+    vp = jnp.full((n_pages, ps, kvh, dh), jnp.nan, jnp.float32)
+    t = jnp.arange(s)
+    pid = tbl[:, t // ps]
+    off = jnp.broadcast_to(t % ps, (b, s))
+    kp = kp.at[pid, off].set(k)
+    vp = vp.at[pid, off].set(v)
+    return q, k, v, kp, vp, tbl
+
+
+@pytest.mark.parametrize("ps", [4, 8, 16])
+@pytest.mark.parametrize("h,kvh,bm", [(4, 4, 32), (8, 2, 64), (4, 1, 16)])
+def test_paged_prefill_kernel_interpret_matches_ref_m64(ps, h, kvh, bm):
+    """Prefill-grid kernel (bm-tiled query blocks, M=64) vs ref vs the
+    unchunked causal oracle; the NaN pool padding proves the page walk
+    stays inside the prompt's own pages."""
+    rng = np.random.default_rng(ps + h + bm)
+    b, s, dh = 2, 64, 32
+    q, k, v, kp, vp, tbl = _mk_prefill(rng, b, s, h, kvh, dh, ps)
+    lengths = jnp.full((b,), s, jnp.int32)
+    ref = paged_attention_prefill_ref(q, kp, vp, tbl, lengths,
+                                      pages_per_step=1)
+    ker = paged_attention_prefill_pallas(q, kp, vp, tbl, lengths, bm=bm,
+                                         interpret=True)
+    assert np.isfinite(np.asarray(ker)).all()
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=ATOL)
+    orc = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(orc), atol=1e-5)
+
+
+def test_paged_prefill_ragged_lengths_and_odd_sizes():
+    """Per-row lengths: rows at/past their length produce zeros, live
+    rows match the oracle restricted to their prefix; S not divisible by
+    bm or page_size exercises the padded tail tiles."""
+    rng = np.random.default_rng(17)
+    b, s, h, kvh, dh, ps = 3, 50, 4, 2, 16, 8
+    q, k, v, kp, vp, tbl = _mk_prefill(rng, b, s, h, kvh, dh, ps)
+    lengths = jnp.asarray([0, 23, 50], jnp.int32)
+    ref = paged_attention_prefill_ref(q, kp, vp, tbl, lengths,
+                                      pages_per_step=2)
+    ker = paged_attention_prefill_pallas(q, kp, vp, tbl, lengths, bm=16,
+                                         interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=ATOL)
+    orc = np.asarray(full_attention(q, k, v, causal=True))
+    got = np.asarray(ref)
+    for r, ln in enumerate([0, 23, 50]):
+        np.testing.assert_allclose(got[r, :ln], orc[r, :ln], atol=1e-5)
+        np.testing.assert_array_equal(got[r, ln:],
+                                      np.zeros_like(got[r, ln:]))
+
+
+def test_paged_prefill_ops_mode_dispatch():
+    rng = np.random.default_rng(19)
+    q, k, v, kp, vp, tbl = _mk_prefill(rng, 2, 32, 4, 2, 8, 8)
+    lengths = jnp.full((2,), 32, jnp.int32)
+    ref = paged_attention_prefill(q, kp, vp, tbl, lengths, mode="ref")
+    itp = paged_attention_prefill(q, kp, vp, tbl, lengths, mode="interpret",
+                                  bm=16)
+    np.testing.assert_allclose(np.asarray(itp), np.asarray(ref), atol=ATOL)

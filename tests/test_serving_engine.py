@@ -203,14 +203,33 @@ def test_attention_prefill_paged_writes_match_contiguous():
                 np.asarray(cc["v"][r, t]), atol=1e-6)
 
 
-def test_attention_decode_paged_rejects_windows():
+def test_attention_paged_rejects_windows_with_clear_error():
+    """SWA over a paged cache is unsupported: both entry points must say
+    so loudly (NotImplementedError naming the combo), not silently
+    mis-compute or raise a generic error."""
     p = attention_init(jax.random.PRNGKey(0), 32, 2, 2, 16)
-    x = jnp.zeros((1, 1, 32))
     cache = {"k": jnp.zeros((4, 2, 2, 16)), "v": jnp.zeros((4, 2, 2, 16))}
-    with pytest.raises(ValueError):
-        attention_decode(p, x, cache, jnp.zeros((1,), jnp.int32),
+    table = jnp.zeros((1, 2), jnp.int32)
+    with pytest.raises(NotImplementedError, match="window=8.*page_table"):
+        attention_decode(p, jnp.zeros((1, 1, 32)), cache,
+                         jnp.zeros((1,), jnp.int32),
                          num_heads=2, kv_heads=2, head_dim=16, window=8,
-                         page_table=jnp.zeros((1, 2), jnp.int32))
+                         page_table=table)
+    with pytest.raises(NotImplementedError, match="window=8.*page_table"):
+        attention_prefill(p, jnp.zeros((1, 3, 32)), cache,
+                          num_heads=2, kv_heads=2, head_dim=16, window=8,
+                          page_table=table)
+
+
+def test_attention_paged_rejects_unknown_impl():
+    p = attention_init(jax.random.PRNGKey(0), 32, 2, 2, 16)
+    cache = {"k": jnp.zeros((4, 2, 2, 16)), "v": jnp.zeros((4, 2, 2, 16))}
+    with pytest.raises(ValueError, match="paged_impl"):
+        attention_decode(p, jnp.zeros((1, 1, 32)), cache,
+                         jnp.zeros((1,), jnp.int32),
+                         num_heads=2, kv_heads=2, head_dim=16,
+                         page_table=jnp.zeros((1, 2), jnp.int32),
+                         paged_impl="bogus")
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +279,41 @@ def test_engine_midstream_join_token_identical_dense_and_packed():
         # another had already started decoding
         assert max(r.admitted_at for r in done.values()) > 0
         assert eng.pool.free_pages == eng.pool.num_pages - 1  # all freed
+
+
+@pytest.mark.parametrize("kind,impl", [
+    ("dense", "fused"), ("packed", "fused"), ("dense", "gather"),
+])
+def test_engine_null_page_poison_streams_bitmatch_solo(kind, impl):
+    """Fill the null page (page 0) of every layer pool with NaN before
+    serving: streamed tokens must stay bit-identical to solo decode.
+    This proves the attention read path — fused page walk AND legacy
+    gather — never takes a value from an unallocated page (a single NaN
+    would poison the softmax and change the argmax)."""
+    cfg, dense_p, packed_p = _smoke_pair()
+    cfg = cfg.replace(paged_attn_impl=impl)
+    params = dense_p if kind == "dense" else packed_p
+    rng = np.random.default_rng(2)
+    lens, gens, arrivals = [5, 9, 7], [6, 4, 5], [0, 0, 3]
+    prompts = [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+               for l in lens]
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16)
+    for i, c in enumerate(eng.caches):
+        if "k" in c:
+            eng.caches[i] = {**c,
+                             "k": c["k"].at[NULL_PAGE].set(jnp.nan),
+                             "v": c["v"].at[NULL_PAGE].set(jnp.nan)}
+    for p, g, a in zip(prompts, gens, arrivals):
+        eng.submit(p, g, arrival=a)
+    done = eng.run()
+    assert len(done) == len(prompts)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        got = np.asarray(done[i].tokens)
+        assert np.isfinite(got).all()
+        np.testing.assert_array_equal(
+            got, _solo(cfg, params, p, g),
+            err_msg=f"{kind}/{impl}/request {i}")
 
 
 def test_engine_eos_retires_slot_and_readmits():
