@@ -8,7 +8,8 @@ Times the two jitted serving calls (DESIGN.md §7/§8) — batched
     {"config": {...}, "dense_tok_s": ..., "packed_tok_s": ...,
      "dense_prefill_ms": ..., "packed_prefill_ms": ...,
      "prefill_speedup": ..., "decode_speedup": ...,
-     "continuous_batching": {...}, "paged_attention": {...}}
+     "continuous_batching": {...}, "prefix_caching": {...},
+     "paged_attention": {...}}
 
 The ``continuous_batching`` section streams ragged requests through the
 paged-KV ``ServingEngine`` (DESIGN.md §9) — staggered arrivals,
@@ -104,6 +105,87 @@ def _bench_paged_attention(
         "num_heads": num_heads, "kv_heads": kv_heads, "head_dim": head_dim,
         "by_context": by_ctx,
         "speedup_at_longest": by_ctx[longest]["speedup"],
+    }
+
+
+def _gen_arrivals(rng, n: int, kind: str, mean_gap: float = 2.0):
+    """Arrival ticks for ``n`` requests: ``burst`` lands everything at
+    tick 0; ``poisson`` draws exponential inter-arrival gaps (mean
+    ``mean_gap`` ticks) and floors the cumulative sum to integer ticks."""
+    if kind == "burst":
+        return [0] * n
+    import numpy as np
+
+    gaps = rng.exponential(mean_gap, size=n)
+    gaps[0] = 0.0
+    return [int(t) for t in np.floor(np.cumsum(gaps))]
+
+
+def _bench_prefix_caching(
+    params, cfg, *, requests: int = 8, prompt_len: int = 256, tail: int = 8,
+    page_size: int = 8, gen: int = 8, ticks_per_sync: int = 4,
+) -> Dict[str, Any]:
+    """Shared-prefix TTFT: ``requests`` prompts sharing the first
+    ``prompt_len - tail`` tokens stream through the engine with prefix
+    caching on vs off (DESIGN.md §12).  All admissions happen in arrival
+    order inside one scheduler pass, so request *i*'s time-to-first-token
+    includes prefills 0..i — with caching, hit requests prefill only
+    their ``tail`` tokens, so late burst positions improve the most.
+    ``check.sh`` gates hit-request p50 TTFT at >= 2x vs uncached."""
+    import numpy as np
+
+    from repro.serving import ServingEngine
+
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab, size=prompt_len - tail)
+    prompts = [
+        np.concatenate([prefix, rng.integers(0, cfg.vocab, size=tail)])
+        .astype(np.int32) for _ in range(requests)]
+
+    def run_once(caching: bool, arrivals):
+        eng = ServingEngine(params, cfg, num_slots=requests,
+                            page_size=page_size,
+                            max_seq_len=prompt_len + gen,
+                            ticks_per_sync=ticks_per_sync,
+                            prefix_caching=caching)
+        for pr, at in zip(prompts, arrivals):
+            eng.submit(pr, gen, arrival=at)
+        t0 = time.perf_counter()
+        done = eng.run()
+        reqs = [done[rid] for rid in sorted(done)]
+        ttft = [r.first_token_time - t0 for r in reqs]
+        hits = [i for i, r in enumerate(reqs) if r.prefix_hit_pages > 0]
+        return ttft, hits, eng
+
+    def pct(xs, q) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def section(kind: str, arr_rng) -> Dict[str, Any]:
+        arrivals = _gen_arrivals(arr_rng, requests, kind)
+        run_once(True, arrivals)       # warm every jit shape once
+        ttft_s, hits, eng = run_once(True, arrivals)
+        ttft_u, _, _ = run_once(False, arrivals)
+        hit_s = [ttft_s[i] for i in hits]     # same burst positions in
+        hit_u = [ttft_u[i] for i in hits]     # both runs -> fair ratio
+        return {
+            "arrival": kind, "arrivals": arrivals,
+            "hit_requests": len(hits),
+            "shared": {"ttft_p50_ms": pct(ttft_s, 50) * 1e3,
+                       "ttft_p99_ms": pct(ttft_s, 99) * 1e3},
+            "unshared": {"ttft_p50_ms": pct(ttft_u, 50) * 1e3,
+                         "ttft_p99_ms": pct(ttft_u, 99) * 1e3},
+            "hit_ttft_p50_ms": pct(hit_s, 50) * 1e3,
+            "unshared_hit_ttft_p50_ms": pct(hit_u, 50) * 1e3,
+            "ttft_speedup_hit_p50":
+                pct(hit_u, 50) / max(pct(hit_s, 50), 1e-9),
+            "prefix_stats": eng.prefix_stats,
+        }
+
+    return {
+        "requests": requests, "prompt_len": prompt_len, "tail": tail,
+        "page_size": page_size, "gen": gen,
+        "burst": section("burst", np.random.default_rng(11)),
+        "poisson": section("poisson", np.random.default_rng(13)),
     }
 
 
@@ -240,8 +322,13 @@ def bench_serving(
             "chunked_speedup_vs_single_tick":
                 best["packed_tok_s"] / max(base["packed_tok_s"], 1e-9),
         }
+        # shared-prefix TTFT: prefix caching on vs off over the same
+        # burst/poisson arrival trace (DESIGN.md §12).  check.sh gates
+        # hit-request p50 TTFT >= 2x in the burst.
+        pc = _bench_prefix_caching(packed, cfg, gen=min(gen, 8))
     else:
         cb = {"unsupported": "SWA window / encoder-decoder arch"}
+        pc = {"unsupported": "SWA window / encoder-decoder arch"}
     # fused page-walk vs legacy gather decode attention over long contexts
     # (independent of the smoke model above — fixed attention shapes, one
     # table sized for the longest context).  check.sh gates fused >= gather
@@ -263,6 +350,7 @@ def bench_serving(
         "prefill_speedup": dense["prefill_ms"] / max(sparse["prefill_ms"], 1e-9),
         "decode_speedup": sparse["tok_s"] / max(dense["tok_s"], 1e-9),
         "continuous_batching": cb,
+        "prefix_caching": pc,
         "paged_attention": paged,
     }
 
@@ -293,6 +381,14 @@ def main(quick: bool = False):
             f"packed@tps{cb['chunked_ticks_per_sync']}="
             f"{cb['chunked_packed_tok_s']:.0f}tok/s "
             f"({cb['chunked_speedup_vs_single_tick']:.2f}x)")
+    pc = r["prefix_caching"]
+    if "burst" in pc:
+        b = pc["burst"]
+        lines.append(
+            f"serving_prefix_ttft,{b['shared']['ttft_p50_ms'] * 1e3:.0f},"
+            f"burst p50 shared={b['shared']['ttft_p50_ms']:.1f}ms "
+            f"unshared={b['unshared']['ttft_p50_ms']:.1f}ms "
+            f"hit_speedup={b['ttft_speedup_hit_p50']:.2f}x")
     pa = r["paged_attention"]
     longest = str(pa["max_len"])
     row = pa["by_context"][longest]
@@ -352,6 +448,15 @@ def cli() -> int:
               f"(best at ticks_per_sync={cb['chunked_ticks_per_sync']})")
     else:
         print(f"  stream: skipped ({cb['unsupported']})")
+    pc = result["prefix_caching"]
+    if "burst" in pc:
+        for kind in ("burst", "poisson"):
+            s = pc[kind]
+            print(f"  prefix[{kind:>7}]: TTFT p50 shared "
+                  f"{s['shared']['ttft_p50_ms']:7.1f}ms  unshared "
+                  f"{s['unshared']['ttft_p50_ms']:7.1f}ms  "
+                  f"hit p50 {s['ttft_speedup_hit_p50']:.2f}x "
+                  f"({s['hit_requests']}/{pc['requests']} hit)")
     pa = result["paged_attention"]
     for ctx, row in sorted(pa["by_context"].items(), key=lambda kv: int(kv[0])):
         print(f"  paged[ctx={ctx:>5}]: gather {row['gather_ms']:7.2f}ms  "

@@ -61,6 +61,15 @@ python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
     --pruned 0.75 --prompt-len 12 --gen 8 --requests 5 --arrive-every 2 \
     --ticks-per-sync 4 --request-temperatures 0,0.8 --top-k 16
 
+# prefix caching (DESIGN.md §12): a burst of requests sharing one long
+# prompt prefix — later arrivals map the cached pages (refcount bump)
+# and prefill only their unique tails.  The command exits nonzero if any
+# stream diverges from its solo decode OR if no admission actually hit
+# the prefix cache, so the sharing path can't silently go dead
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
+    --pruned 0.75 --prompt-len 16 --gen 8 --requests 5 --arrive-every 1 \
+    --ticks-per-sync 4 --page-size 4 --shared-prefix
+
 # serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
 # (full default size on purpose — ~10s on CPU, and the committed numbers
 # should show the real packed-over-dense margin, which --quick thins out)
@@ -95,9 +104,21 @@ pa = r["paged_attention"]
 sp = pa["speedup_at_longest"]
 assert sp >= 1.0, \
     f"fused paged decode lost to gather at ctx {pa['max_len']}: {sp:.2f}x"
+# prefix caching (DESIGN.md §12): in the shared-prefix burst, requests
+# that hit the cache skip the shared prefill entirely — their p50 TTFT
+# must be at least 2x better than the same burst positions uncached,
+# and the overall burst p50 must improve too
+pc = r["prefix_caching"]["burst"]
+hit = pc["ttft_speedup_hit_p50"]
+assert pc["hit_requests"] > 0, "shared-prefix burst produced no cache hits"
+assert hit >= 2.0, \
+    f"prefix-cache hit TTFT speedup regressed: {hit:.2f}x < 2.0x"
+assert pc["shared"]["ttft_p50_ms"] < pc["unshared"]["ttft_p50_ms"], \
+    "shared-prefix burst p50 TTFT did not beat the uncached run"
 print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x, "
       f"chunked stream {tick4 / tick1:.2f}x over single-tick, "
-      f"fused paged decode {sp:.2f}x over gather at ctx {pa['max_len']} OK")
+      f"fused paged decode {sp:.2f}x over gather at ctx {pa['max_len']}, "
+      f"prefix-cache hit TTFT {hit:.2f}x OK")
 PY
 
 echo "check.sh: OK"

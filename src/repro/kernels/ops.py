@@ -136,28 +136,34 @@ def paged_attention_decode(
         interpret=(mode == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "mode", "pages_per_step"))
+@functools.partial(
+    jax.jit, static_argnames=("bm", "mode", "pages_per_step", "q_offset"))
 def paged_attention_prefill(
-    q: jnp.ndarray,            # (B, S, H, dh) — rotated, positions [0, S)
-    k_pool: jnp.ndarray,       # (P, page_size, K, dh) — prompt K/V already
+    q: jnp.ndarray,            # (B, S, H, dh) — rotated, pos [q_offset, q_offset+S)
+    k_pool: jnp.ndarray,       # (P, page_size, K, dh) — context K/V already
     v_pool: jnp.ndarray,       #   scattered into the rows' pages
     page_table: jnp.ndarray,   # (B, max_pages) int32
-    lengths: jnp.ndarray,      # (B,) int32 per-row prompt length (<= S)
+    lengths: jnp.ndarray,      # (B,) int32 per-row TOTAL length (<= q_offset+S)
     *,
     bm: int = 64,              # Pallas query-tile rows
     mode: str = "auto",
     pages_per_step: int = 8,
+    q_offset: int = 0,         # static logical position of q row 0
 ) -> jnp.ndarray:
     """Causal paged prefill attention over the same page walk (bm-tiled
-    query blocks in the Pallas kernel).  Rows past ``lengths`` produce
-    zeros.  Returns (B, S, H, dh) fp32."""
+    query blocks in the Pallas kernel).  ``q_offset > 0`` is the
+    tail-only prefill of a prefix-cache hit: queries sit at logical
+    positions ``[q_offset, q_offset+S)`` and attend over every earlier
+    page in the table, including shared prefix pages this request never
+    computed (DESIGN.md §12).  Rows past ``lengths`` produce zeros.
+    Returns (B, S, H, dh) fp32."""
     if _use_ref(mode):
         return paged_attention_prefill_ref(
             q, k_pool, v_pool, page_table, lengths,
-            pages_per_step=pages_per_step)
+            pages_per_step=pages_per_step, q_offset=q_offset)
     return paged_attention_prefill_pallas(
         q, k_pool, v_pool, page_table, lengths, bm=bm,
-        interpret=(mode == "interpret"))
+        interpret=(mode == "interpret"), q_offset=q_offset)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "bn", "mode"))

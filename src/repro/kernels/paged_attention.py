@@ -256,17 +256,23 @@ def paged_attention_decode_pallas(
 # ---------------------------------------------------------------------------
 
 def paged_attention_prefill_ref(
-    q: jnp.ndarray,            # (B, S, H, dh) — rotated, positions [0, S)
+    q: jnp.ndarray,            # (B, S, H, dh) — rotated, pos [q_offset, q_offset+S)
     k_pool: jnp.ndarray,       # (P, page_size, K, dh) — prompt K/V scattered in
     v_pool: jnp.ndarray,
     page_table: jnp.ndarray,   # (B, max_pages) int32
-    lengths: jnp.ndarray,      # (B,) int32 — per-row prompt length (<= S)
+    lengths: jnp.ndarray,      # (B,) int32 — per-row TOTAL length (<= q_offset+S)
     *,
     pages_per_step: int = 8,
+    q_offset: int = 0,
 ) -> jnp.ndarray:
     """Causal paged prefill reference: same page-segment walk as decode,
-    vectorized over all S query rows.  Rows at/past their ``lengths`` get
-    zero output.  Returns (B, S, H, dh) fp32."""
+    vectorized over all S query rows.  With ``q_offset`` (static) the
+    queries sit at logical positions ``[q_offset, q_offset+S)`` and the
+    walk covers every page from logical position 0 — the tail-only
+    prefill of a request whose first ``q_offset`` tokens are already
+    cached in shared prefix pages (DESIGN.md §12).  ``lengths`` is the
+    per-row *total* context (prefix + tail); rows at/past their length
+    get zero output.  Returns (B, S, H, dh) fp32."""
     b, s, h, dh = q.shape
     kvh = k_pool.shape[2]
     g = h // kvh
@@ -280,7 +286,7 @@ def paged_attention_prefill_ref(
     m0 = jnp.full((b, kvh, g, s, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, kvh, g, s, 1), jnp.float32)
     acc0 = jnp.zeros((b, kvh, g, s, dh), jnp.float32)
-    qpos = jnp.arange(s, dtype=jnp.int32)
+    qpos = q_offset + jnp.arange(s, dtype=jnp.int32)
     seg = pages_per_step * ps
     offs = jnp.arange(ps, dtype=jnp.int32)
     page_idx = jnp.arange(pages_per_step, dtype=jnp.int32)
@@ -309,7 +315,7 @@ def paged_attention_prefill_ref(
                                    preferred_element_type=jnp.float32)
         return m2, l, acc
 
-    n_steps = _cdiv(_cdiv(s, ps), pages_per_step)
+    n_steps = _cdiv(_cdiv(q_offset + s, ps), pages_per_step)
     m, l, acc = jax.lax.fori_loop(0, n_steps, body, (m0, l0, acc0))
     out = acc / jnp.where(l == 0.0, 1.0, l)                 # dead rows -> 0
     return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
@@ -317,10 +323,12 @@ def paged_attention_prefill_ref(
 
 def _prefill_kernel(tbl_ref, len_ref, q_ref, kp_ref, vp_ref, o_ref,
                     m_ref, l_ref, acc_ref, *, page_size: int, block_q: int,
-                    group: int, scale: float):
+                    group: int, scale: float, q_offset: int):
     """Grid (B, K, q_tiles, pages), pages innermost.  Query rows are laid
     out (bm·G, dh) so one dot covers the whole GQA group; the causal mask
-    is built from 2D iotas (qpos = row // G, kvpos = page offset)."""
+    is built from 2D iotas (qpos = q_offset + row // G, kvpos = page
+    offset) — ``q_offset`` shifts every query to its logical position for
+    tail-only prefill over shared prefix pages (DESIGN.md §12)."""
     bb = pl.program_id(0)
     i = pl.program_id(2)
     j = pl.program_id(3)
@@ -332,8 +340,8 @@ def _prefill_kernel(tbl_ref, len_ref, q_ref, kp_ref, vp_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # pages needed by this q tile: kvpos <= qpos < min(len, (i+1)·bm)
-    qhi = jnp.minimum(ln, (i + 1) * block_q)
+    # pages needed by this q tile: kvpos <= qpos < min(len, q_offset+(i+1)·bm)
+    qhi = jnp.minimum(ln, q_offset + (i + 1) * block_q)
 
     @pl.when(j * page_size < qhi)
     def _page():
@@ -345,7 +353,7 @@ def _prefill_kernel(tbl_ref, len_ref, q_ref, kp_ref, vp_ref, o_ref,
             qg, kp, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale     # (bm·G, ps)
         shp = (block_q * group, page_size)
-        qpos = (i * block_q
+        qpos = (q_offset + i * block_q
                 + jax.lax.broadcasted_iota(jnp.int32, shp, 0) // group)
         kvpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, shp, 1)
         valid = (kvpos <= qpos) & (kvpos < ln) & (qpos < ln)
@@ -378,6 +386,7 @@ def paged_attention_prefill_pallas(
     *,
     bm: int = 64,
     interpret: bool = False,
+    q_offset: int = 0,
 ) -> jnp.ndarray:
     b, s, h, dh = q.shape
     kvh = k_pool.shape[2]
@@ -388,7 +397,7 @@ def paged_attention_prefill_pallas(
     bm = min(bm, s)
     s_pad = _cdiv(s, bm) * bm
     n_qt = s_pad // bm
-    n_pg = _cdiv(s, ps)                                     # prompt pages only
+    n_pg = _cdiv(q_offset + s, ps)                          # context pages only
     ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
 
     qt = q.reshape(b, s, kvh, g, dh).transpose(0, 2, 1, 3, 4)  # (B,K,S,G,dh)
@@ -396,7 +405,7 @@ def paged_attention_prefill_pallas(
         qt = jnp.pad(qt, ((0, 0), (0, 0), (0, s_pad - s), (0, 0), (0, 0)))
 
     def pool_map(bb, k, i, j, tbl, cl):
-        live = (jnp.minimum(cl[bb], (i + 1) * bm) + ps - 1) // ps
+        live = (jnp.minimum(cl[bb], q_offset + (i + 1) * bm) + ps - 1) // ps
         jj = jnp.minimum(j, jnp.maximum(live - 1, 0))
         return (tbl[bb, jj], 0, k, 0)
 
@@ -425,7 +434,7 @@ def paged_attention_prefill_pallas(
         )
     out = pl.pallas_call(
         functools.partial(_prefill_kernel, page_size=ps, block_q=bm,
-                          group=g, scale=scale),
+                          group=g, scale=scale, q_offset=q_offset),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, s_pad, g, dh), jnp.float32),
         interpret=interpret,

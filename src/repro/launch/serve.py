@@ -77,6 +77,13 @@ def main() -> int:
                     help="[--stream] per-request sampling temperatures, "
                          "cycled over the stream (overrides --temperature "
                          "per request; 0 = greedy)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="[--stream] all requests share a long common "
+                         "prompt prefix (and the first two share the FULL "
+                         "prompt) to exercise the prefix cache: hit "
+                         "requests map the cached pages and prefill only "
+                         "their tail (DESIGN.md §12); streams still "
+                         "verify token-identical vs solo decode")
     args = ap.parse_args()
 
     import jax
@@ -199,9 +206,23 @@ def _run_stream(args, cfg, params) -> int:
 
     plen, gen = max(args.prompt_len, 1), args.gen
     rng = np.random.default_rng(args.seed)
-    lens = rng.integers(max(1, plen // 2), plen + 1, size=args.requests)
-    prompts = [rng.integers(0, cfg.vocab, size=int(l)).astype(np.int32)
-               for l in lens]
+    if args.shared_prefix:
+        # long common prefix + short unique tails; requests 0 and 1 get
+        # the IDENTICAL full prompt — duplicate prompts must still get
+        # unique rids and per-request fold_in keys (verified below)
+        tail = max(plen // 4, 1)
+        pre = max(plen - tail, 0)
+        prefix = rng.integers(0, cfg.vocab, size=pre).astype(np.int32)
+        prompts = [np.concatenate([
+            prefix, rng.integers(0, cfg.vocab, size=tail).astype(np.int32)])
+            for _ in range(args.requests)]
+        if args.requests >= 2:
+            prompts[1] = prompts[0].copy()
+        lens = np.asarray([len(p) for p in prompts])
+    else:
+        lens = rng.integers(max(1, plen // 2), plen + 1, size=args.requests)
+        prompts = [rng.integers(0, cfg.vocab, size=int(l)).astype(np.int32)
+                   for l in lens]
     req_temps = None
     if args.request_temperatures:
         req_temps = [float(t) for t in args.request_temperatures.split(",")]
@@ -238,6 +259,24 @@ def _run_stream(args, cfg, params) -> int:
     joins = [r.admitted_at for r in done.values()]
     print(f"  joins at ticks {sorted(joins)}; "
           f"pool free pages after drain: {engine.pool.free_pages}")
+    st = engine.prefix_stats
+    if st["enabled"]:
+        print(f"  prefix cache: {st['hit_requests']}/{st['lookups']} "
+              f"admissions hit, {st['pages_shared']} pages mapped instead "
+              f"of prefilled, {st['blocks_indexed']} blocks resident, "
+              f"{st['cow_copies']} COW copies, refcount high-water "
+              f"{st['ref_high_water']}")
+    if args.shared_prefix:
+        # dedupe safety: N identical full prompts must still be distinct
+        # requests — unique rids, and (for sampled runs) independent
+        # fold_in(base, rid) keys; the per-rid solo replication below is
+        # what proves each stream used its own key
+        rids = sorted(done)
+        assert len(set(rids)) == len(done), f"duplicate rids: {rids}"
+        if st["enabled"] and st["hit_requests"] == 0:
+            print("stream verify FAILED: shared-prefix run produced no "
+                  "prefix-cache hits")
+            return 1
 
     # token-identity vs solo decode through the static hot path.  Each
     # request replays with ITS effective sampling params and the engine's

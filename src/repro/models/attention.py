@@ -204,6 +204,7 @@ def attention_prefill(
     out_seq: str = "seq",
     page_table: Optional[jnp.ndarray] = None,   # (B, max_pages) -> pool ids
     paged_impl: str = "fused",                  # fused (page walk) | gather
+    start_pos: int = 0,                         # static logical pos of x[:, 0]
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Batched causal prefill that also fills the KV cache.
 
@@ -220,8 +221,15 @@ def attention_prefill(
     runs *over the pages themselves* with the fused bm-tiled page-walk
     kernel (kernels/paged_attention.py, DESIGN.md §11) — no contiguous
     logical view is ever materialized.  ``paged_impl="gather"`` keeps
-    the legacy path (attention over the fresh contiguous K/V) for
-    differential tests.  Ring (SWA) caches are not paged."""
+    the legacy path for differential tests.  Ring (SWA) caches are not
+    paged.
+
+    ``start_pos`` (static, paged-only) runs a *tail-only* prefill: the
+    tokens in ``x`` sit at logical positions ``[start_pos, start_pos+S)``
+    and the first ``start_pos`` positions are already in the pool —
+    shared prefix pages mapped into this row's table by the prefix cache
+    (DESIGN.md §12).  K/V scatter at the offset slots and attention
+    covers the full ``start_pos + S`` context."""
     accum = accum or jnp.float32
     if page_table is not None and window is not None:
         raise NotImplementedError(
@@ -231,13 +239,19 @@ def attention_prefill(
             "window or use a contiguous cache")
     if paged_impl not in ("fused", "gather"):
         raise ValueError(f"unknown paged_impl {paged_impl!r}")
+    if start_pos and page_table is None:
+        raise ValueError(
+            "attention_prefill: start_pos > 0 needs a page_table — the "
+            "prefix lives in pool pages, a contiguous cache has no shared "
+            "prefix to resume from (DESIGN.md §12)")
     b, s, _ = x.shape
     q = _split_heads(dense(p["wq"], x), num_heads)
     k = _split_heads(dense(p["wk"], x), kv_heads)
     v = _split_heads(dense(p["wv"], x), kv_heads)
     if use_rope:
         if positions is None:
-            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = jnp.broadcast_to(
+                jnp.arange(start_pos, start_pos + s)[None], (b, s))
         if mrope_sections is not None:
             if positions.ndim == 2:
                 positions = jnp.tile(positions[..., None], (1, 1, 3))
@@ -251,18 +265,30 @@ def attention_prefill(
     kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
     if page_table is not None:
         ps = cache["k"].shape[1]
-        t = jnp.arange(s)
+        t = jnp.arange(start_pos, start_pos + s)
         pid = page_table[:, t // ps]                   # (B, S) pool pages
         off = jnp.broadcast_to(t % ps, (b, s))
         ck = cache["k"].at[pid, off].set(kc)
         cv = cache["v"].at[pid, off].set(vc)
+        total = start_pos + s                          # full logical context
         if paged_impl == "fused":
-            # attend straight over the just-written pages: the fused
-            # kernel walks this row's table, so other sequences' pages
-            # (and unallocated ones) are never touched
+            # attend straight over the pages: the fused kernel walks this
+            # row's table from logical position 0 — covering shared
+            # prefix pages this call never wrote — so other sequences'
+            # pages (and unallocated ones) are never touched
             o = _paged_prefill_op(
-                q, ck, cv, page_table, jnp.full((b,), s, jnp.int32),
-                bm=min(chunk, s)).astype(x.dtype)
+                q, ck, cv, page_table, jnp.full((b,), total, jnp.int32),
+                bm=min(chunk, s), q_offset=start_pos).astype(x.dtype)
+        elif start_pos:
+            # gather path with a prefix: materialize the logical view up
+            # to the full context (every position < total is live), then
+            # run the contiguous kernel with the query offset
+            mp = page_table.shape[1]
+            kv = ck[page_table].reshape(b, mp * ps, kv_heads, head_dim)
+            vv = cv[page_table].reshape(b, mp * ps, kv_heads, head_dim)
+            o = chunked_causal_attention(
+                q, kv[:, :total].astype(q.dtype), vv[:, :total].astype(q.dtype),
+                causal=True, window=None, chunk=chunk, q_offset=start_pos)
         else:
             o = chunked_causal_attention(q, k, v, causal=True, window=None,
                                          chunk=chunk)

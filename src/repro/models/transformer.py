@@ -516,6 +516,8 @@ def lm_prefill(
     caches: List[Dict],
     batch: Dict[str, jnp.ndarray],
     cfg: ModelConfig,
+    *,
+    start_pos: int = 0,
 ) -> Tuple[jnp.ndarray, List[Dict]]:
     """Cache-filling batched prefill: one `lm_forward`-style pass over the
     whole prompt that also fills every KV/SSM cache, replacing
@@ -527,6 +529,14 @@ def lm_prefill(
     self-attn layer scatters its prompt K/V straight into the pages the
     rows own (paged prefill, DESIGN.md §10); recurrent and cross-attn
     caches are unaffected.
+
+    ``start_pos`` (static, paged-only) runs a *tail-only* prefill for a
+    prefix-cache hit (DESIGN.md §12): ``batch["tokens"]`` holds only the
+    uncached suffix, which sits at logical positions
+    ``[start_pos, start_pos+S)``; the first ``start_pos`` tokens' K/V
+    already live in shared prefix pages mapped into the rows' tables.
+    Attention-only stacks only — a recurrent mixer's state cannot be
+    resumed from pages it never saw.
 
     Runs unchanged on packed (BSR) params — every matmul routes through
     the ``layers.matmul`` / ``layers.expert_matmul`` dispatch points."""
@@ -541,15 +551,27 @@ def lm_prefill(
 
     positions = batch.get("positions")
     if positions is None:
+        pos1 = jnp.arange(start_pos, start_pos + s)
         if cfg.mrope_sections is not None:
-            positions = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, 3))
+            positions = jnp.broadcast_to(pos1[None, :, None], (b, s, 3))
         else:
-            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = jnp.broadcast_to(pos1[None], (b, s))
 
     specs = layer_specs(cfg)
     if cfg.enc_layers > 0:
         specs = [LayerSpec(mixer="attn", mlp="dense", cross_attn=True,
                            use_rope=cfg.use_rope)] * cfg.n_layers
+    if start_pos:
+        bad = sorted({sp.mixer for sp in specs if sp.mixer != "attn"})
+        if page_tables is None:
+            raise ValueError(
+                "lm_prefill: start_pos > 0 needs page_tables — the cached "
+                "prefix lives in shared pool pages (DESIGN.md §12)")
+        if bad or cfg.enc_layers > 0:
+            raise ValueError(
+                "lm_prefill: start_pos > 0 needs an attention-only stack — "
+                f"recurrent/cross-attn mixers ({bad or ['cross-attn']}) carry "
+                "state the cached pages do not hold")
 
     # mirrors _apply_layer (which cannot thread caches) — keep residual
     # sharding, out_seq and the MoE impl dispatch in sync with it
@@ -566,7 +588,7 @@ def lm_prefill(
                 rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
                 use_rope=spec.use_rope, accum=_accum(cfg),
                 out_seq=_out_seq(cfg), page_table=page_tables,
-                paged_impl=cfg.paged_attn_impl,
+                paged_impl=cfg.paged_attn_impl, start_pos=start_pos,
             )
             if spec.cross_attn:
                 xc = _norm_apply(cfg, lp["cross_norm"], x + h)

@@ -7,9 +7,15 @@ allocator, a FIFO admission scheduler, and the engine that scans
 ``ticks_per_sync`` decode steps on device between scheduler events —
 per-row ``cache_len``, page tables and per-slot sampling params all
 threaded through ``lm_decode`` inside one ``lax.scan`` chunk.
+
+DESIGN.md §12 adds prefix caching on top: ``PagePool`` refcounts let one
+physical page appear in many tables, and ``PrefixIndex`` maps
+page-aligned prompt-prefix blocks (chain-hashed token content) onto the
+pages that already hold their K/V, so shared prefixes prefill once.
 """
 from .engine import ServingEngine
-from .pages import NULL_PAGE, PagePool
+from .pages import NULL_PAGE, PagePool, PrefixIndex
 from .scheduler import Request, Scheduler
 
-__all__ = ["ServingEngine", "PagePool", "NULL_PAGE", "Request", "Scheduler"]
+__all__ = ["ServingEngine", "PagePool", "PrefixIndex", "NULL_PAGE",
+           "Request", "Scheduler"]

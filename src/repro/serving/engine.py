@@ -12,6 +12,20 @@ Its host loop interleaves three things per scheduler event:
    intermediate cache) and whose recurrent states (mamba/xLSTM) are
    written into the slot row.  The first token is the prefill argmax —
    identical to the static hot path in ``launch/serve.py``.
+
+   With **prefix caching** (default on for attention-only stacks,
+   DESIGN.md §12) admission first matches the prompt's longest
+   page-aligned cached prefix in the ``PrefixIndex``: hit pages are
+   *mapped* into the new table (refcount bump, zero prefill compute for
+   the hit region) and ``lm_prefill`` runs only on the uncached tail at
+   its logical ``start_pos``.  After prefill the request's own full
+   prompt blocks are indexed, so identical or prefix-sharing later
+   arrivals — including re-admissions after the original retired — skip
+   that compute too.  The match is capped one token short of the prompt
+   (the tail is never empty), so every position a request ever writes
+   (tail prefill + decode) lands in privately allocated pages — COW is
+   unreachable on this path, but a refcount guard before every decode
+   chunk enforces it (``pool.cow``) as a backstop.
 2. **decode** — ONE jitted ``_decode_chunk`` call scans
    ``ticks_per_sync`` decode steps for all slots on device: per-row
    ``cache_len`` masks, per-row page-table reads/writes, per-slot
@@ -40,7 +54,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +65,7 @@ from repro.configs.base import ModelConfig
 from repro.models import init_caches, layer_specs, lm_decode, lm_prefill
 from repro.models.transformer import _select_token_rows
 
-from .pages import NULL_PAGE, PagePool
+from .pages import NULL_PAGE, PagePool, PrefixIndex
 from .scheduler import Request, Scheduler
 
 __all__ = ["ServingEngine"]
@@ -68,21 +83,27 @@ class _Slot:
 # one compilation cache per (cfg, shapes) — a warm-up engine really warms
 # the engine being measured.
 
-@functools.partial(jax.jit, static_argnames=("cfg",),
+@functools.partial(jax.jit, static_argnames=("cfg", "start"),
                    donate_argnames=("caches",))
-def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg):
+def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg,
+                        start=0):
     """Paged prefill-on-join: one cache-filling pass over a (1, L) prompt
     that writes attention K/V *directly* into the pool pages named by
     ``table`` (1, max_pages) — no contiguous intermediate cache, no
     page-wise copy afterwards.  Recurrent (SSM/xLSTM) layers prefill into
     a scratch single-row cache whose final state lands in row ``slot``
-    of the per-slot pool.  Returns (first_token (1,), new caches)."""
+    of the per-slot pool.  ``start > 0`` (static) is the prefix-cache
+    tail-only variant: ``tokens`` is the uncached suffix at logical
+    positions ``[start, start+L)``, attending over the shared prefix
+    pages already mapped into ``table`` (attention-only stacks; the
+    engine gates this).  Returns (first_token (1,), new caches)."""
     specs = layer_specs(cfg)
     row_caches = init_caches(cfg, 1, tokens.shape[1], jnp.float32)
     pre = [pool if spec.mixer == "attn" else rc
            for spec, pool, rc in zip(specs, caches, row_caches)]
     logits, new = lm_prefill(
-        params, pre, {"tokens": tokens, "page_tables": table}, cfg)
+        params, pre, {"tokens": tokens, "page_tables": table}, cfg,
+        start_pos=start)
     first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
     out = []
     for spec, pool, nc in zip(specs, caches, new):
@@ -183,6 +204,10 @@ class ServingEngine:
         admissions/retirements only happening at chunk boundaries.
     temperature / top_k / top_p : engine-wide sampling defaults; each
         request may override them at :meth:`submit`.
+    prefix_caching : share page-aligned prompt-prefix KV across requests
+        through a content-hash :class:`PrefixIndex` (DESIGN.md §12).
+        Auto-disabled for stacks with recurrent mixers — their per-slot
+        state cannot be resumed from pages alone.
     """
 
     def __init__(
@@ -200,6 +225,7 @@ class ServingEngine:
         top_p: Optional[float] = None,
         eos_id: Optional[int] = None,
         seed: int = 0,
+        prefix_caching: bool = True,
     ):
         if cfg.window is not None:
             raise ValueError("paged KV caches do not support SWA windows")
@@ -214,11 +240,19 @@ class ServingEngine:
         if num_pages is None:
             num_pages = num_slots * self.max_pages + 1
         self.pool = PagePool(num_pages, page_size)
-        self.scheduler = Scheduler(self.pool)
+        self._specs = layer_specs(cfg)
+        attn_only = all(spec.mixer == "attn" for spec in self._specs)
+        self.prefix_caching = bool(prefix_caching) and attn_only
+        self.prefix_index = (PrefixIndex(self.pool)
+                             if self.prefix_caching else None)
+        self.scheduler = Scheduler(self.pool, self.prefix_index)
         self.temperature, self.top_k, self.top_p = temperature, top_k, top_p
         self.eos_id = eos_id
         self._base_key = jax.random.PRNGKey(seed)
-        self._specs = layer_specs(cfg)
+        # prefix-cache observability (see prefix_stats)
+        self.prefix_lookups = 0       # admissions that consulted the index
+        self.prefix_hit_requests = 0  # admissions with >= 1 block hit
+        self.prefix_pages_shared = 0  # hit pages mapped instead of prefilled
 
         # device state: page-pool caches per layer; recurrent mixers keep
         # ordinary per-slot rows (their state is O(1) per sequence)
@@ -286,17 +320,49 @@ class ServingEngine:
     def _admit(self) -> int:
         free = [i for i, s in enumerate(self.slots) if s is None]
         admitted = self.scheduler.admit(self.tick, len(free))
+        # pages promised to this batch's admissions: eviction below must
+        # never reclaim a page a sibling's reservation counted on.  (A
+        # sibling's hits can only *grow* between here and its own turn —
+        # earlier admissions insert fresh blocks — so pinning the match
+        # as of now is sufficient.)
+        pins: Set[int] = set()
+        if self.prefix_index is not None:
+            for req in admitted:
+                pins.update(self.prefix_index.match(req.prompt))
         for req in admitted:
             slot = free.pop(0)
-            pages = self.pool.alloc(req.budget_tokens)
+            hits: List[int] = []
+            if self.prefix_index is not None:
+                self.prefix_lookups += 1
+                hits = self.prefix_index.match(req.prompt)
+            n_hit = len(hits)
+            total = self.pool.pages_for(req.budget_tokens)
+            need = total - n_hit
+            if (self.prefix_index is not None
+                    and need > self.pool.free_pages):
+                self.prefix_index.evict(need - self.pool.free_pages,
+                                        exclude=pins | set(hits))
+            self.pool.share(hits)                 # map, don't recompute
+            pages = hits + self.pool.alloc_pages(need)
             self._tables[slot] = NULL_PAGE
-            self._tables[slot, :len(pages)] = pages
+            self._tables[slot, :total] = pages
+            # prefill only the uncached tail; the match is capped one
+            # token short of the prompt, so the tail is never empty and
+            # every write lands past the shared region
+            start = n_hit * self.pool.page_size
             first, self.caches = _paged_prefill_step(
-                self.params, jnp.asarray(req.prompt[None]), self.caches,
-                jnp.asarray(self._tables[slot][None]),
-                jnp.asarray(slot, jnp.int32), cfg=self.cfg)
+                self.params, jnp.asarray(req.prompt[start:][None]),
+                self.caches, jnp.asarray(self._tables[slot][None]),
+                jnp.asarray(slot, jnp.int32), cfg=self.cfg, start=start)
             self._cache_len[slot] = req.prompt_len
             tok = int(first[0])
+            req.first_token_time = time.perf_counter()
+            req.prefix_hit_pages = n_hit
+            if self.prefix_index is not None:
+                self.prefix_index.insert(req.prompt, pages)
+                if n_hit:
+                    self.prefix_hit_requests += 1
+                self.prefix_pages_shared += n_hit
             self._tok[slot, 0] = tok
             self._rngs[slot] = np.asarray(
                 jax.random.fold_in(self._base_key, req.rid), np.uint32)
@@ -308,6 +374,40 @@ class ServingEngine:
             self.slots[slot] = _Slot(req=req, pages=pages, emitted=[tok])
             self._maybe_finish(slot)
         return len(admitted)
+
+    def _cow_guard(self, active: List[int]) -> None:
+        """Enforce copy-on-write before a decode chunk: no row may write
+        into a page it does not exclusively own.  The standard admission
+        path makes this unreachable (decode always writes into a private
+        tail page — see _admit), so any trigger means an external holder
+        shared a live tail page; the write target is copied to a fresh
+        page and the row's table repointed, never the sharer's data."""
+        ps = self.pool.page_size
+        for i in active:
+            s = self.slots[i]
+            lo = int(self._cache_len[i])
+            hi = lo + self.ticks_per_sync  # write positions this chunk
+            for idx in range(lo // ps, (hi - 1) // ps + 1):
+                if idx >= self.max_pages:
+                    break
+                pid = int(self._tables[i, idx])
+                if pid == NULL_PAGE or self.pool.refcount(pid) == 1:
+                    continue
+                if (self.pool.free_pages == 0
+                        and self.prefix_index is not None):
+                    self.prefix_index.evict(1, exclude=set(s.pages))
+                new = self.pool.cow(pid)
+                for li, spec in enumerate(self._specs):
+                    if spec.mixer != "attn":
+                        continue
+                    c = self.caches[li]
+                    self.caches[li] = {
+                        **c,
+                        "k": c["k"].at[new].set(c["k"][pid]),
+                        "v": c["v"].at[new].set(c["v"][pid]),
+                    }
+                self._tables[i, idx] = new
+                s.pages[s.pages.index(pid)] = new
 
     def _maybe_finish(self, slot: int) -> None:
         s = self.slots[slot]
@@ -333,6 +433,7 @@ class ServingEngine:
         if not active:
             self.tick += 1
             return admitted
+        self._cow_guard(active)
         left = np.zeros((self.num_slots,), np.int32)
         for i in active:
             left[i] = self.slots[i].req.max_new - len(self.slots[i].emitted)
@@ -357,10 +458,36 @@ class ServingEngine:
         self.tick += ticks
         return admitted
 
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        """Prefix-cache counters: lookups / hit requests / pages shared
+        (mapped instead of prefilled), blocks currently indexed, COW
+        copies served, index evictions, and the refcount high-water mark
+        (most tables any single page ever appeared in)."""
+        idx = self.prefix_index
+        return {
+            "enabled": int(self.prefix_caching),
+            "lookups": self.prefix_lookups,
+            "hit_requests": self.prefix_hit_requests,
+            "pages_shared": self.prefix_pages_shared,
+            "blocks_indexed": len(idx) if idx is not None else 0,
+            "evictions": idx.evictions if idx is not None else 0,
+            "cow_copies": self.pool.cow_copies,
+            "ref_high_water": self.pool.ref_high_water,
+        }
+
+    def release_prefix_cache(self) -> int:
+        """Drop every cached prefix block (e.g. to fully drain the pool);
+        pages still mapped by active requests survive through the
+        requests' own references.  Returns entries released."""
+        if self.prefix_index is None:
+            return 0
+        return self.prefix_index.clear()
+
     def _state(self) -> str:
         """One-line engine state for stall diagnostics."""
         waiting = [(r.rid, r.budget_tokens,
-                    self.pool.pages_for(r.budget_tokens), r.arrival)
+                    self.scheduler.pages_needed(r), r.arrival)
                    for r in self.scheduler.waiting]
         active = [(s.req.rid, len(s.emitted), s.req.max_new)
                   for s in self.slots if s is not None]
@@ -369,7 +496,8 @@ class ServingEngine:
                 f"active(rid,emitted,max_new)={active} "
                 f"pool={self.pool.free_pages}/{self.pool.num_pages - 1} "
                 f"pages free (page_size={self.pool.page_size}, "
-                f"max {self.max_pages} pages/request)")
+                f"max {self.max_pages} pages/request) "
+                f"prefix_cache={self.prefix_stats}")
 
     def run(self, max_ticks: int = 100_000) -> Dict[int, Request]:
         """Drive chunks until every submitted request has finished."""
@@ -385,12 +513,16 @@ class ServingEngine:
             admitted = self.step()
             if idle and due and not admitted:
                 head = self.scheduler.waiting[0]
+                avail = self.pool.free_pages
+                if self.prefix_index is not None:
+                    avail += self.prefix_index.evictable_pages()
                 raise RuntimeError(
                     "admission stalled: head request "
                     f"rid={head.rid} needs "
-                    f"{self.pool.pages_for(head.budget_tokens)} pages "
+                    f"{self.scheduler.pages_needed(head)} pages "
                     f"({head.budget_tokens} tokens) but the drained pool "
-                    f"only has {self.pool.free_pages}; {self._state()}")
+                    f"only has {avail} (incl. evictable cache); "
+                    f"{self._state()}")
         return {r.rid: r for r in self.scheduler.finished}
 
     @property

@@ -9,16 +9,25 @@ always run to its last token without preemption, so mid-stream joins are
 token-identical to solo decodes (DESIGN.md §9).  Head-of-line blocking
 is deliberate — skipping ahead to smaller requests would starve long
 prompts under sustained load.
+
+With a :class:`~repro.serving.pages.PrefixIndex` attached, the
+accounting runs *under sharing* (DESIGN.md §12): a request's page need
+is discounted by its cached-prefix hits (those pages are mapped, not
+allocated), and cache-only index pages (refcount 1, pinned by no
+same-tick sibling's hits) count as available — the engine evicts them
+leaf-first on demand.  The invariant is unchanged: once admitted, every
+page a request will ever write is privately owned, so it still runs to
+its last token without preemption.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, List, Optional, Sequence, Set
 
 import numpy as np
 
-from .pages import PagePool
+from .pages import PagePool, PrefixIndex
 
 __all__ = ["Request", "Scheduler"]
 
@@ -43,6 +52,8 @@ class Request:
     tokens: Optional[np.ndarray] = None   # emitted tokens, set on finish
     admitted_at: Optional[int] = None
     finished_at: Optional[int] = None
+    prefix_hit_pages: int = 0             # prefix-cache pages mapped at admit
+    first_token_time: Optional[float] = None  # wall clock of first token
 
     @property
     def prompt_len(self) -> int:
@@ -57,10 +68,12 @@ class Request:
 
 
 class Scheduler:
-    """FIFO queue + admission policy over a :class:`PagePool`."""
+    """FIFO queue + admission policy over a :class:`PagePool`, optionally
+    prefix-cache-aware via a :class:`PrefixIndex`."""
 
-    def __init__(self, pool: PagePool):
+    def __init__(self, pool: PagePool, index: Optional[PrefixIndex] = None):
         self.pool = pool
+        self.index = index
         self.waiting: Deque[Request] = deque()
         self.finished: List[Request] = []
 
@@ -71,24 +84,52 @@ class Scheduler:
         self.waiting.append(req)
         self.waiting = deque(sorted(self.waiting, key=lambda r: r.arrival))
 
+    def pages_needed(self, req: Request) -> int:
+        """Private pages the request would need right now: its full
+        budget minus the page-aligned prefix blocks already cached."""
+        need = self.pool.pages_for(req.budget_tokens)
+        if self.index is not None:
+            need -= len(self.index.match(req.prompt))
+        return need
+
     def admit(self, tick: int, free_slots: int) -> List[Request]:
         """Pop admissible head-of-queue requests for this tick: arrived,
-        a slot free, and the pool able to reserve the full token budget."""
+        a slot free, and the pool able to reserve the full token budget.
+
+        Under prefix caching the budget is discounted by cached-prefix
+        hits, and index pages evictable *right now* — refcount 1 and not
+        among the hits already promised (``pinned``) to earlier
+        admissions of this same tick — count as free.  Hits only ever
+        grow between this gate and the engine's allocation (same-tick
+        siblings insert fresh blocks; eviction never touches pinned
+        pages), so the reservation is a safe upper bound."""
         out: List[Request] = []
         reserved = 0   # pages already committed to this tick's admissions
+        pinned: Set[int] = set()
         while self.waiting and free_slots > 0:
             head = self.waiting[0]
             if head.arrival > tick:
                 break
-            need = self.pool.pages_for(head.budget_tokens)
-            if reserved + need > self.pool.free_pages:
+            hits: List[int] = []
+            if self.index is not None:
+                hits = self.index.match(head.prompt)
+            need = self.pool.pages_for(head.budget_tokens) - len(hits)
+            avail = self.pool.free_pages
+            if self.index is not None:
+                avail += self.index.evictable_pages(
+                    exclude=pinned | set(hits))
+            if reserved + need > avail:
                 break  # head-of-line blocks until pages free up
             reserved += need
+            pinned.update(hits)
             out.append(self.waiting.popleft())
             free_slots -= 1
         return out
 
     def retire(self, req: Request, pages: Sequence[int], tick: int) -> None:
+        """Release the request's references.  Under sharing this is a
+        refcount decrement: a page returns to the free list only when no
+        other table (and no prefix-index entry) still maps it."""
         req.finished_at = tick
         self.pool.free(pages)
         self.finished.append(req)

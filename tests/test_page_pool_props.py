@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from _hyp import given, settings, st
-from repro.serving import NULL_PAGE, PagePool
+from repro.serving import NULL_PAGE, PagePool, PrefixIndex
 
 
 @settings(max_examples=50, deadline=None)
@@ -79,3 +79,163 @@ def test_pool_rejects_double_and_null_frees(seed, num_pages):
             pool.free([got[0]])                     # double free
         with pytest.raises(ValueError):
             pool.free([num_pages + 7])              # out of range
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(2, 17),
+)
+def test_pool_refcount_trace_invariants(seed, num_pages):
+    """Random alloc/share/free/cow traces against a host-side refcount
+    mirror (DESIGN.md §12).  At EVERY step:
+
+    * conservation under sharing: ``free_pages + #{refcount > 0} ==
+      num_pages - 1`` — a page is on the free list XOR referenced,
+    * ``refcount`` / ``live_refs`` match the mirror exactly,
+    * no page is freed while referenced: share/free/cow of a refcount-0
+      page raise without changing the pool,
+    * COW never aliases a writer: ``cow`` of a shared page returns a
+      FRESH page (caller's ref transferred), and only an exclusively
+      owned page comes back as itself with no copy counted.
+    """
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=num_pages, page_size=4)
+    usable = num_pages - 1
+    refs = {}                       # mirror: pid -> refcount
+    high = 0
+
+    def check():
+        live = {p for p, r in refs.items() if r > 0}
+        assert pool.free_pages + len(live) == usable
+        assert pool.live_refs() == sum(refs.values())
+        for p, r in refs.items():
+            assert pool.refcount(p) == r
+        assert pool.ref_high_water == high
+
+    for _ in range(60):
+        live = [p for p, r in refs.items() if r > 0]
+        op = rng.choice(["alloc", "share", "free", "cow", "bad"])
+        if op == "alloc" or not live:
+            if pool.free_pages:
+                pid = pool.alloc_pages(1)[0]
+                assert refs.get(pid, 0) == 0        # never hand out a live page
+                refs[pid] = 1
+                high = max(high, 1)
+            else:
+                with pytest.raises(RuntimeError):
+                    pool.alloc_pages(1)
+        elif op == "share":
+            pid = int(rng.choice(live))
+            pool.share([pid])
+            refs[pid] += 1
+            high = max(high, refs[pid])
+        elif op == "free":
+            pid = int(rng.choice(live))
+            pool.free([pid])
+            refs[pid] -= 1
+        elif op == "cow":
+            pid = int(rng.choice(live))
+            copies = pool.cow_copies
+            if refs[pid] == 1:
+                assert pool.cow(pid) == pid         # exclusive: no copy
+                assert pool.cow_copies == copies
+            elif pool.free_pages == 0:
+                before = dict(refs)
+                with pytest.raises(RuntimeError):
+                    pool.cow(pid)                   # dry pool: clean failure
+                for p, r in before.items():
+                    assert pool.refcount(p) == r
+            else:
+                new = pool.cow(pid)
+                assert new != pid                   # never aliases the writer
+                assert refs.get(new, 0) == 0
+                refs[pid] -= 1
+                refs[new] = 1
+                assert pool.refcount(new) == 1
+                assert pool.cow_copies == copies + 1
+        else:
+            dead = [p for p in range(1, num_pages) if refs.get(p, 0) == 0]
+            if dead:
+                pid = int(rng.choice(dead))
+                for bad in (pool.share, pool.free):
+                    with pytest.raises(ValueError):
+                        bad([pid])                  # refcount-0 page
+                with pytest.raises(ValueError):
+                    pool.cow(pid)
+            with pytest.raises(ValueError):
+                pool.free([NULL_PAGE])
+        check()
+
+    for pid, r in refs.items():                     # drain all references
+        pool.free([pid] * r)
+    assert pool.free_pages == usable and pool.live_refs() == 0
+
+
+def test_prefix_index_roundtrip_retire_and_eviction():
+    """PrefixIndex lifecycle against one pool (DESIGN.md §12): chain-hash
+    insert/match roundtrip, the proper-prefix cap, branch sharing,
+    survival past request retirement, and leaf-first LRU eviction that
+    never reclaims a page another holder still maps."""
+    pool = PagePool(num_pages=20, page_size=4)
+    idx = PrefixIndex(pool)
+    rng = np.random.default_rng(3)
+
+    a = rng.integers(0, 100, size=13).astype(np.int32)   # 3 full blocks + 1
+    assert idx.match(a) == []                            # cold index
+    a_pages = pool.alloc_pages(4)
+    assert idx.insert(a, a_pages) == 3                   # only FULL blocks
+    assert len(idx) == 3
+
+    # roundtrip + proper-prefix cap: a 12-token prompt with identical
+    # content may only match 2 blocks — its own last block must prefill
+    assert idx.match(a) == a_pages[:3]
+    assert idx.match(a[:12]) == a_pages[:2]
+    assert idx.match(a[:4]) == []                        # 1 block -> cap 0
+
+    # same content at a different position must not alias (chain hash)
+    shifted = np.concatenate([a[4:8], a[4:8], a[4:8]]).astype(np.int32)
+    assert idx.match(shifted) == []
+
+    # divergent sibling: shares 2 blocks, adds 1 of its own (a branch)
+    b = np.concatenate([a[:8], rng.integers(100, 200, size=5)]).astype(np.int32)
+    hits = idx.match(b)
+    assert hits == a_pages[:2]
+    pool.share(hits)                                     # b maps the hit pages
+    b_pages = hits + pool.alloc_pages(2)
+    assert idx.insert(b, b_pages) == 1                   # 2 blocks were hits
+    assert len(idx) == 4
+
+    # retirement frees the requests' refs; the index refs keep every
+    # indexed page alive for readmission
+    pool.free(a_pages)
+    pool.free(b_pages)
+    assert idx.match(a) == a_pages[:3]
+    assert idx.match(b) == a_pages[:2] + [b_pages[2]]
+    assert pool.free_pages == 19 - 4                     # only non-indexed back
+
+    # all 4 entries are refcount-1 now; exclude pins
+    assert idx.evictable_pages() == 4
+    assert idx.evictable_pages(exclude=a_pages[:2]) == 2
+
+    # leaf-first: the shared trunk (children > 0) cannot be a victim
+    # while its continuations are cached.  Evict one page: a leaf goes.
+    assert idx.evict(1) == 1
+    assert len(idx) == 3
+    assert idx.match(a[:8]) == a_pages[:1]               # trunk still matches
+    # a pinned leaf never goes: exclude everything -> nothing evictable
+    assert idx.evict(10, exclude=[e for e in a_pages + b_pages]) == 0
+    # drain the rest leaf-first; every page returns exactly once
+    assert idx.evict(10) == 3
+    assert len(idx) == 0 and idx.evictions == 4
+    assert pool.free_pages == 19 and pool.live_refs() == 0
+
+    # a page still mapped by a live request is never evictable
+    c_pages = pool.alloc_pages(1)
+    c = rng.integers(0, 100, size=4).astype(np.int32)
+    idx.insert(c, c_pages)                               # refcount 2: req + index
+    assert idx.evictable_pages() == 0 and idx.evict(1) == 0
+    pool.free(c_pages)                                   # request retires
+    assert idx.evictable_pages() == 1
+    assert idx.clear() == 1
+    assert pool.free_pages == 19

@@ -241,3 +241,53 @@ def test_paged_prefill_ops_mode_dispatch():
     itp = paged_attention_prefill(q, kp, vp, tbl, lengths, mode="interpret",
                                   bm=16)
     np.testing.assert_allclose(np.asarray(itp), np.asarray(ref), atol=ATOL)
+
+
+@pytest.mark.parametrize("ps,start", [(4, 4), (8, 24), (16, 16)])
+def test_paged_prefill_q_offset_tail_matches_full(ps, start):
+    """Tail-only prefill (DESIGN.md §12 prefix caching): queries for
+    positions [start, s) against pages holding the FULL prompt's K/V
+    must reproduce rows [start:] of the full-prompt prefill — the walk
+    covers the cached-prefix pages the tail queries attend over, the
+    causal mask uses absolute positions, and the NaN padding past the
+    prompt stays unread."""
+    rng = np.random.default_rng(23 + ps)
+    b, s, h, kvh, dh = 2, 48, 4, 2, 16
+    q, k, v, kp, vp, tbl = _mk_prefill(rng, b, s, h, kvh, dh, ps)
+    lengths = jnp.full((b,), s, jnp.int32)   # total lengths incl. prefix
+    full = paged_attention_prefill_ref(q, kp, vp, tbl, lengths,
+                                       pages_per_step=2)
+    tail = paged_attention_prefill_ref(q[:, start:], kp, vp, tbl, lengths,
+                                       pages_per_step=2, q_offset=start)
+    np.testing.assert_allclose(np.asarray(tail),
+                               np.asarray(full)[:, start:], atol=ATOL)
+    ker = paged_attention_prefill_pallas(q[:, start:], kp, vp, tbl, lengths,
+                                         bm=16, interpret=True,
+                                         q_offset=start)
+    assert np.isfinite(np.asarray(ker)).all()
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(tail), atol=ATOL)
+    orc = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(tail),
+                               np.asarray(orc)[:, start:], atol=1e-5)
+
+
+def test_paged_prefill_q_offset_ragged_and_ops_dispatch():
+    """q_offset composed with per-row lengths: a row whose total length
+    ends mid-tail zeroes its out-of-range rows, and the ops-layer
+    dispatch threads q_offset to both impls."""
+    rng = np.random.default_rng(29)
+    b, s, h, kvh, dh, ps, start = 2, 40, 4, 2, 16, 8, 16
+    q, k, v, kp, vp, tbl = _mk_prefill(rng, b, s, h, kvh, dh, ps)
+    lengths = jnp.asarray([40, 25], jnp.int32)
+    full = paged_attention_prefill_ref(q, kp, vp, tbl, lengths,
+                                       pages_per_step=1)
+    ref = paged_attention_prefill(q[:, start:], kp, vp, tbl, lengths,
+                                  mode="ref", q_offset=start)
+    itp = paged_attention_prefill(q[:, start:], kp, vp, tbl, lengths,
+                                  mode="interpret", bm=16, q_offset=start)
+    got = np.asarray(ref)
+    np.testing.assert_allclose(got, np.asarray(full)[:, start:], atol=ATOL)
+    np.testing.assert_allclose(np.asarray(itp), got, atol=ATOL)
+    assert np.isfinite(got).all()
+    np.testing.assert_array_equal(got[1, 25 - start:],
+                                  np.zeros_like(got[1, 25 - start:]))

@@ -278,6 +278,9 @@ def test_engine_midstream_join_token_identical_dense_and_packed():
         # joins really were interleaved: some request admitted after
         # another had already started decoding
         assert max(r.admitted_at for r in done.values()) > 0
+        # the prefix index deliberately retains full prompt blocks after
+        # retirement (readmit reuse); dropping it must drain the pool
+        eng.release_prefix_cache()
         assert eng.pool.free_pages == eng.pool.num_pages - 1  # all freed
 
 
@@ -337,6 +340,120 @@ def test_engine_eos_retires_slot_and_readmits():
     np.testing.assert_array_equal(done[1].tokens,
                                   _solo(cfg, dense, p1, 3, eos_id=eos))
     assert done[1].admitted_at >= done[0].finished_at
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _shared_prompts(rng, cfg, *, prefix_len, tails):
+    """Prompts sharing their first ``prefix_len`` tokens, each with a
+    unique random tail."""
+    prefix = rng.integers(0, cfg.vocab, size=prefix_len)
+    return [np.concatenate([prefix, rng.integers(0, cfg.vocab, size=t)])
+            .astype(np.int32) for t in tails]
+
+
+@pytest.mark.parametrize("kind", ["dense", "packed"])
+def test_engine_shared_prefix_streams_bitmatch_solo(kind):
+    """Requests sharing a 3-page prompt prefix, joining mid-burst: hit
+    requests map the cached pages and prefill only their tails, yet every
+    stream stays bit-identical to its solo decode — the load-bearing
+    property of DESIGN.md §12, for dense AND packed params."""
+    cfg, dense_p, packed_p = _smoke_pair()
+    params = dense_p if kind == "dense" else packed_p
+    rng = np.random.default_rng(13)
+    prompts = _shared_prompts(rng, cfg, prefix_len=12, tails=[3, 5, 2, 4])
+    gens = [5, 4, 6, 4]
+    arrivals = [0, 1, 4, 6]            # later requests join mid-stream
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=24, ticks_per_sync=2)
+    for p, g, a in zip(prompts, gens, arrivals):
+        eng.submit(p, g, arrival=a)
+    done = eng.run()
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        np.testing.assert_array_equal(
+            done[i].tokens, _solo(cfg, params, p, g),
+            err_msg=f"{kind}/request {i}")
+    st = eng.prefix_stats
+    assert st["enabled"] and st["hit_requests"] == 3
+    assert st["pages_shared"] == 9     # 3 later requests x 3 prefix pages
+    assert done[0].prefix_hit_pages == 0
+    assert all(done[i].prefix_hit_pages == 3 for i in (1, 2, 3))
+    # the index deliberately retains prompt blocks past retirement
+    # (readmit reuse); dropping it must drain the pool completely
+    eng.release_prefix_cache()
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+
+
+def test_engine_prefix_reuse_after_retirement():
+    """EOS-retire-readmit reuse: the cached blocks survive the request
+    that computed them, so the same prompt submitted long after the
+    original finished maps its prefix instead of re-prefilling."""
+    cfg, dense, _ = _smoke_pair()
+    rng = np.random.default_rng(17)
+    p0 = rng.integers(0, cfg.vocab, size=13).astype(np.int32)
+    eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
+                        max_seq_len=24)
+    eng.submit(p0, 4)
+    eng.submit(p0.copy(), 4, arrival=30)   # long after request 0 retired
+    done = eng.run()
+    want = _solo(cfg, dense, p0, 4)
+    np.testing.assert_array_equal(done[0].tokens, want)
+    np.testing.assert_array_equal(done[1].tokens, want)
+    assert done[0].prefix_hit_pages == 0
+    assert done[1].prefix_hit_pages == 3   # (13 - 1) // 4: proper prefix
+    assert done[1].admitted_at >= done[0].finished_at
+    assert eng.prefix_stats["hit_requests"] == 1
+
+
+def test_engine_identical_sampled_prompts_keep_independent_streams():
+    """Three byte-identical sampled prompts in one burst: every request
+    keeps its own rid (dedupe-safe) and its own fold_in(base, rid) PRNG
+    stream, so sharing the ENTIRE cached prefix never collapses the
+    samples — each stream replays against its own solo decode."""
+    cfg, dense, _ = _smoke_pair()
+    rng = np.random.default_rng(19)
+    p0 = rng.integers(0, cfg.vocab, size=13).astype(np.int32)
+    base = jax.random.PRNGKey(5)
+    eng = ServingEngine(dense, cfg, num_slots=3, page_size=4,
+                        max_seq_len=24, seed=5, temperature=0.9, top_k=8)
+    rids = [eng.submit(p0.copy(), 5) for _ in range(3)]
+    assert len(set(rids)) == 3
+    done = eng.run()
+    for rid in rids:
+        want = _solo_sampled(cfg, dense, p0, 5, 0.9, 8, None,
+                             jax.random.fold_in(base, rid))
+        np.testing.assert_array_equal(done[rid].tokens, want,
+                                      err_msg=f"request {rid}")
+    assert eng.prefix_stats["hit_requests"] == 2  # 2nd/3rd hit the 1st's
+
+
+def test_engine_cow_guard_copies_shared_write_page():
+    """COW backstop: the standard path never decodes into a shared page,
+    but if an external holder maps a live tail page anyway, the guard
+    must copy it to a fresh page before the chunk — the stream stays
+    bit-identical and the sharer's page is never written."""
+    cfg, dense, _ = _smoke_pair()
+    rng = np.random.default_rng(23)
+    p0 = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+    want = _solo(cfg, dense, p0, 6)
+    eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2)
+    eng.submit(p0, 6)
+    eng.step()                               # admit + first decode chunk
+    # an external reference on the page the NEXT chunk writes into
+    idx = int(eng._cache_len[0]) // eng.pool.page_size
+    pid = int(eng._tables[0, idx])
+    eng.pool.share([pid])
+    done = eng.run()
+    assert eng.pool.cow_copies >= 1
+    assert eng.prefix_stats["cow_copies"] >= 1
+    np.testing.assert_array_equal(done[0].tokens, want)
+    assert eng.pool.refcount(pid) == 1       # only the external ref left
+    eng.pool.free([pid])
+    eng.release_prefix_cache()
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
 
 
 def test_engine_stalls_loudly_when_pool_too_small():
@@ -422,6 +539,7 @@ def test_engine_fuzz_streams_bitmatch_solo(kind):
             np.testing.assert_array_equal(
                 done[rid].tokens, solos[rid],
                 err_msg=f"{kind}/tps={tps}/request {rid}")
+        eng.release_prefix_cache()   # index refs survive retirement
         assert eng.pool.free_pages == eng.pool.num_pages - 1
 
 
