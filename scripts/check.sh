@@ -17,6 +17,7 @@ python -m pytest -q \
     tests/test_sparse_exec.py \
     tests/test_serve_equiv.py \
     tests/test_serving_engine.py \
+    tests/test_serving_faults.py \
     tests/test_page_pool_props.py \
     tests/test_models.py \
     tests/test_pruner.py \
@@ -70,6 +71,16 @@ python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
     --pruned 0.75 --prompt-len 16 --gen 8 --requests 5 --arrive-every 1 \
     --ticks-per-sync 4 --page-size 4 --shared-prefix
 
+# fault tolerance (DESIGN.md §13): seeded chaos smoke — NaN poisoning,
+# allocator failure, index corruption, a chunk crash, a cancel, a
+# deadline and queue-overflow rejects, all injected into one stream.
+# The command exits nonzero unless every request reaches a terminal
+# status, every fault counter trips, non-faulted streams stay
+# bit-identical to solo decode, and the page pool drains exactly
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --chaos \
+    --pruned 0.75 --prompt-len 12 --gen 16 --requests 4 --batch 3 \
+    --arrive-every 2 --ticks-per-sync 4 --page-size 8
+
 # serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
 # (full default size on purpose — ~10s on CPU, and the committed numbers
 # should show the real packed-over-dense margin, which --quick thins out)
@@ -115,10 +126,20 @@ assert hit >= 2.0, \
     f"prefix-cache hit TTFT speedup regressed: {hit:.2f}x < 2.0x"
 assert pc["shared"]["ttft_p50_ms"] < pc["unshared"]["ttft_p50_ms"], \
     "shared-prefix burst p50 TTFT did not beat the uncached run"
+# fault tolerance (DESIGN.md §13): the non-finite guard compiled into
+# the decode chunk must cost < 5% streamed throughput on clean traffic
+# vs the unguarded (PR-7) chunk — isolation is an isfinite reduction,
+# not a second pass over the logits
+ft = r["fault_tolerance"]
+ov = ft["overhead_pct"]
+assert ov < 5.0, \
+    f"fault-guard overhead regressed: {ov:.1f}% >= 5% " \
+    f"({ft['guard_on_tok_s']:.0f} vs {ft['guard_off_tok_s']:.0f} tok/s)"
 print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x, "
       f"chunked stream {tick4 / tick1:.2f}x over single-tick, "
       f"fused paged decode {sp:.2f}x over gather at ctx {pa['max_len']}, "
-      f"prefix-cache hit TTFT {hit:.2f}x OK")
+      f"prefix-cache hit TTFT {hit:.2f}x, "
+      f"fault-guard overhead {ov:+.1f}% OK")
 PY
 
 echo "check.sh: OK"

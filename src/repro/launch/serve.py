@@ -84,6 +84,15 @@ def main() -> int:
                          "requests map the cached pages and prefill only "
                          "their tail (DESIGN.md §12); streams still "
                          "verify token-identical vs solo decode")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault-injection smoke (DESIGN.md §13): "
+                         "serve a stream under a deterministic plan of "
+                         "NaN poisoning, allocator failure, index "
+                         "corruption, a chunk crash, a cancel, a deadline "
+                         "and queue-overflow rejects; verify every "
+                         "request reaches a terminal status, non-faulted "
+                         "streams stay bit-identical to solo decode, and "
+                         "the page pool drains exactly")
     args = ap.parse_args()
 
     import jax
@@ -126,6 +135,8 @@ def main() -> int:
         for p, d in sorted(summ["per_path"].items())[:4]:
             print(f"  {p}: density {d:.2f}")
 
+    if args.chaos:
+        return _run_chaos(args, cfg, params)
     if args.stream:
         return _run_stream(args, cfg, params)
 
@@ -321,6 +332,145 @@ def _run_stream(args, cfg, params) -> int:
     print(f"  verify OK: all {len(done)} streams token-identical to "
           f"solo decode ({n_sampled} sampled, {len(done) - n_sampled} "
           "greedy)")
+    return 0
+
+
+def _run_chaos(args, cfg, params) -> int:
+    """Seeded fault-injection smoke (DESIGN.md §13): a streamed workload
+    plus a deterministic plan of every fault kind, a cancel, a deadline
+    and queue-overflow rejects.  Verifies the engine's fault contract
+    end-to-end: every request terminal, the faulted/cancelled/expired
+    streams carrying correct solo-prefix partials, every NON-faulted
+    stream bit-identical to its solo decode, all fault counters
+    registering, and the page pool draining exactly."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import init_caches, lm_generate, lm_prefill
+    from repro.serving import (FaultInjector, RequestStatus, ServingEngine,
+                               alloc_failure, chunk_exception,
+                               index_corruption, nan_logit)
+
+    plen, gen = max(args.prompt_len, 2), max(args.gen, 12)
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(max(2, plen // 2), plen + 1, size=args.requests)
+    prompts = [rng.integers(0, cfg.vocab, size=int(l)).astype(np.int32)
+               for l in lens]
+    victim = 1 % args.requests          # rid the NaN fault targets
+
+    def build(injector=None, max_queue=None):
+        eng = ServingEngine(
+            params, cfg, num_slots=args.batch, page_size=args.page_size,
+            max_seq_len=plen + gen, ticks_per_sync=args.ticks_per_sync,
+            eos_id=args.eos_id, seed=args.seed, max_queue=max_queue,
+            fault_injector=injector)
+        for i, p in enumerate(prompts):
+            eng.submit(p, gen, arrival=i * args.arrive_every)
+        return eng
+
+    # warm the jitted shapes faults will replay through — including the
+    # degraded ticks_per_sync=1 chunk the crash recovery falls back to
+    build().run()
+    if args.ticks_per_sync != 1:
+        w = build()
+        w.ticks_per_sync = 1
+        w.run()
+
+    plan = [
+        alloc_failure(0),                 # admission unwound + retried
+        index_corruption(3),              # caught by verify() -> cache drop
+        nan_logit(6, rid=victim),         # quarantined, others untouched
+        chunk_exception(9),               # snapshot restore + degraded mode
+    ]
+    inj = FaultInjector(plan, seed=args.seed)
+    engine = build(injector=inj, max_queue=args.requests + 2)
+    # lifecycle extras: one request cancelled while queued, one that
+    # cannot finish inside its deadline, and two rejects past the bound
+    rid_cancel = engine.submit(prompts[0], gen, arrival=10_000)
+    rid_expire = engine.submit(
+        prompts[-1], gen, arrival=0, deadline_ticks=max(3, gen // 2))
+    rejected = [engine.submit(prompts[0], gen, arrival=0) for _ in range(3)]
+    engine.cancel(rid_cancel)
+
+    t0 = time.time()
+    done = engine.run()
+    dt = max(time.time() - t0, 1e-9)
+    stats = engine.fault_stats
+    print(f"chaos: {len(done)} requests terminal in {dt:.2f}s under "
+          f"{len(plan)} injected faults + cancel/deadline/overflow")
+    print(f"  statuses: "
+          f"{sorted((r.rid, r.status.value) for r in done.values())}")
+    print(f"  fault counters: {stats}")
+    print(f"  injector fired: {[(k, t) for k, t, _ in inj.fired]}")
+
+    failures = []
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    # 1. totality: every submitted request reached a terminal status
+    check(len(done) == len(engine.requests),
+          f"{len(engine.requests) - len(done)} requests not terminal")
+    check(all(r.terminal for r in engine.requests.values()),
+          "non-terminal request status")
+    # 2. the planned fates landed
+    check(done[rid_cancel].status is RequestStatus.CANCELLED,
+          f"cancel victim ended {done[rid_cancel].status}")
+    check(done[rid_expire].status is RequestStatus.EXPIRED,
+          f"deadline victim ended {done[rid_expire].status}")
+    for r in rejected:
+        check(done[r].status is RequestStatus.REJECTED,
+              f"overflow submit {r} ended {done[r].status}")
+    check(done[victim].status is RequestStatus.FAILED,
+          f"NaN victim ended {done[victim].status}")
+    # 3. every fault path actually exercised
+    for counter in ("guard_trips", "chunk_failures", "alloc_failures",
+                    "index_drops", "rejected", "cancelled", "expired",
+                    "degraded"):
+        check(stats[counter] >= 1, f"counter {counter} never tripped")
+    check(not inj.pending, f"faults never fired: {inj.pending}")
+
+    # 4. token correctness: non-faulted streams bit-identical to solo
+    # decode; FAILED/EXPIRED partials are clean solo prefixes
+    prefill = jax.jit(lambda p, c, t: lm_prefill(p, c, {"tokens": t}, cfg))
+    generate = jax.jit(
+        lambda pp, c, tok, l: lm_generate(
+            pp, c, tok, l, gen, cfg, eos_id=args.eos_id))
+    for rid, req in sorted(done.items()):
+        if req.status is RequestStatus.REJECTED or len(req.tokens) == 0:
+            continue
+        toks = jnp.asarray(req.prompt[None])
+        caches = init_caches(cfg, 1, req.prompt_len + gen, jnp.float32)
+        logits, caches = prefill(params, caches, toks)
+        first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        want, _ = generate(params, caches, first,
+                           jnp.asarray(req.prompt_len, jnp.int32))
+        want = np.asarray(want)[0]
+        if req.status is RequestStatus.FINISHED:
+            check(np.array_equal(req.tokens, want),
+                  f"rid {rid}: non-faulted stream diverged from solo")
+        else:   # FAILED / EXPIRED / CANCELLED partials
+            check(np.array_equal(req.tokens, want[:len(req.tokens)]),
+                  f"rid {rid} ({req.status.value}): partial tokens are "
+                  f"not a solo-decode prefix")
+    # 5. no page leaked through any of it
+    engine.release_prefix_cache()
+    check(engine.pool.free_pages == engine.pool.num_pages - 1,
+          f"pool did not drain: {engine.pool.free_pages}/"
+          f"{engine.pool.num_pages - 1}")
+    check(engine.pool.live_refs() == 0, "dangling page references")
+
+    if failures:
+        for f in failures:
+            print(f"  chaos verify FAILED: {f}")
+        return 1
+    n_ok = sum(1 for r in done.values()
+               if r.status is RequestStatus.FINISHED)
+    print(f"  verify OK: {n_ok} streams bit-identical to solo decode, "
+          f"faulted/cancelled/expired partials are clean prefixes, "
+          f"pool drained exactly")
     return 0
 
 

@@ -12,10 +12,23 @@ DESIGN.md §12 adds prefix caching on top: ``PagePool`` refcounts let one
 physical page appear in many tables, and ``PrefixIndex`` maps
 page-aligned prompt-prefix blocks (chain-hashed token content) onto the
 pages that already hold their K/V, so shared prefixes prefill once.
+
+DESIGN.md §13 adds the fault-tolerance layer: an explicit request
+lifecycle (``RequestStatus``) with cancellation and deadlines, bounded-
+queue backpressure (REJECTED), a non-finite logit guard that quarantines
+poisoned rows without touching their co-batched neighbours, prefix-index
+self-verification, crash-consistent chunk stepping with degraded-mode
+fallback, and a seeded fault-injection harness (``repro.serving.faults``)
+to drive all of it deterministically.
 """
 from .engine import ServingEngine
+from .faults import (Fault, FaultInjector, InjectedFault, alloc_failure,
+                     chunk_exception, index_corruption, nan_logit)
 from .pages import NULL_PAGE, PagePool, PrefixIndex
-from .scheduler import Request, Scheduler
+from .scheduler import (Request, RequestStatus, Scheduler,
+                        TERMINAL_STATUSES)
 
 __all__ = ["ServingEngine", "PagePool", "PrefixIndex", "NULL_PAGE",
-           "Request", "Scheduler"]
+           "Request", "RequestStatus", "Scheduler", "TERMINAL_STATUSES",
+           "Fault", "FaultInjector", "InjectedFault", "nan_logit",
+           "alloc_failure", "index_corruption", "chunk_exception"]

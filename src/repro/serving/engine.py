@@ -38,6 +38,34 @@ Its host loop interleaves three things per scheduler event:
    back to the pool, freeing the slot for the next admission.  Admission
    and retirement only ever happen at chunk boundaries.
 
+**Fault tolerance (DESIGN.md §13).**  Every request walks an explicit
+lifecycle (``RequestStatus``) and ends in exactly one terminal state.
+The layer adds, at each chunk boundary:
+
+* *backpressure* — the waiting queue is bounded (``max_queue``);
+  over-capacity submits are REJECTED instead of queued, with
+  queue-depth/reject counters in :attr:`fault_stats`;
+* *cancellation* — :meth:`cancel` removes a waiting request immediately
+  and aborts an active one at the next chunk boundary, releasing its
+  pages refcount-correctly (prefix-index entries survive, active tables
+  never leak);
+* *deadlines* — ``submit(..., deadline_ticks=N)`` expires a request
+  that has not finished by ``arrival + N`` ticks, waiting or active;
+* *fault isolation* — a non-finite guard inside the decode chunk
+  freezes any row whose logits go NaN/inf at that very tick; the host
+  quarantines only that row (FAILED, pages freed and purged from the
+  prefix index) while co-batched rows keep streaming bit-identically;
+  a ``PrefixIndex.verify()`` self-check each step drops a corrupted
+  cache (by its reference ledger — no leaks) and keeps serving;
+* *crash consistency* — the host-mirrored slot state is snapshotted
+  before each chunk; an exception mid-``step()`` restores the snapshot,
+  counts the failure, and degrades to ``ticks_per_sync=1`` so the
+  engine stays usable (after ``max_chunk_failures`` consecutive
+  failures it gives up loudly).
+
+A seeded :class:`~repro.serving.faults.FaultInjector` can be attached to
+drive all of these deterministically (chaos tests, ``serve.py --chaos``).
+
 Because every row's attention is masked to its own ``[0, cache_len)``
 and its pages are exclusively owned, a sequence that joins mid-stream
 computes exactly what it would compute decoded alone — the token-identity
@@ -55,7 +83,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +94,7 @@ from repro.models import init_caches, layer_specs, lm_decode, lm_prefill
 from repro.models.transformer import _select_token_rows
 
 from .pages import NULL_PAGE, PagePool, PrefixIndex
-from .scheduler import Request, Scheduler
+from .scheduler import Request, RequestStatus, Scheduler
 
 __all__ = ["ServingEngine"]
 
@@ -83,10 +111,10 @@ class _Slot:
 # one compilation cache per (cfg, shapes) — a warm-up engine really warms
 # the engine being measured.
 
-@functools.partial(jax.jit, static_argnames=("cfg", "start"),
+@functools.partial(jax.jit, static_argnames=("cfg", "start", "guard"),
                    donate_argnames=("caches",))
 def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg,
-                        start=0):
+                        start=0, guard=True):
     """Paged prefill-on-join: one cache-filling pass over a (1, L) prompt
     that writes attention K/V *directly* into the pool pages named by
     ``table`` (1, max_pages) — no contiguous intermediate cache, no
@@ -96,7 +124,10 @@ def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg,
     tail-only variant: ``tokens`` is the uncached suffix at logical
     positions ``[start, start+L)``, attending over the shared prefix
     pages already mapped into ``table`` (attention-only stacks; the
-    engine gates this).  Returns (first_token (1,), new caches)."""
+    engine gates this).  ``guard`` additionally reduces the first-token
+    logits to an all-finite flag so admission can quarantine a poisoned
+    prefill before it ever occupies a slot.  Returns
+    (first_token (1,), ok scalar bool, new caches)."""
     specs = layer_specs(cfg)
     row_caches = init_caches(cfg, 1, tokens.shape[1], jnp.float32)
     pre = [pool if spec.mixer == "attn" else rc
@@ -105,6 +136,8 @@ def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg,
         params, pre, {"tokens": tokens, "page_tables": table}, cfg,
         start_pos=start)
     first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    ok = (jnp.all(jnp.isfinite(logits[:, -1])) if guard
+          else jnp.asarray(True))
     out = []
     for spec, pool, nc in zip(specs, caches, new):
         if spec.mixer == "attn":
@@ -115,15 +148,16 @@ def _paged_prefill_step(params, tokens, caches, table, slot, *, cfg,
                 pool, nc))
         else:
             out.append(pool)
-    return first, out
+    return first, ok, out
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "ticks", "eos_id", "sampled"),
+    jax.jit,
+    static_argnames=("cfg", "ticks", "eos_id", "sampled", "guard"),
     donate_argnames=("caches",))
 def _decode_chunk(params, caches, tok, cache_len, tables, rngs,
                   temperature, top_k, top_p, budget_left, *,
-                  cfg, ticks, eos_id, sampled):
+                  cfg, ticks, eos_id, sampled, guard):
     """``ticks`` batched decode steps in ONE ``lax.scan`` — the chunk
     between two scheduler events (DESIGN.md §10).
 
@@ -140,23 +174,39 @@ def _decode_chunk(params, caches, tok, cache_len, tables, rngs,
     every row is done the remaining steps skip the decode body via
     ``lax.cond``.
 
+    ``guard=True`` (static) adds the non-finite fault gate (DESIGN.md
+    §13): a row whose logits contain NaN/inf at some tick is frozen AT
+    that tick exactly like a done row — its poisoned token is never
+    emitted, its state stops advancing — and flagged in the returned
+    ``bad`` vector so the host can quarantine it.  Other rows are
+    untouched: their attention never reads the bad row's pages, so their
+    streams stay bit-identical.
+
     Returns (token block (ticks, B), per-row emitted counts (B,),
-    last tok (B, 1), cache_len (B,), rngs (B, 2), caches) in a single
-    host transfer."""
+    per-row bad flags (B,), last tok (B, 1), cache_len (B,),
+    rngs (B, 2), caches) in a single host transfer."""
     b = tok.shape[0]
     done0 = budget_left <= 0          # free slots ride along frozen
+    bad0 = jnp.zeros((b,), bool)
 
     def live_step(operand):
-        tok, clen, rngs, done, left, cs = operand
+        tok, clen, rngs, done, bad, left, cs = operand
         logits, cs = lm_decode(
             params, cs, {"tokens": tok, "page_tables": tables}, clen, cfg)
+        last = logits[:, -1]
         if sampled:
             nxt, rngs2 = _select_token_rows(
-                logits[:, -1], rngs, temperature, top_k, top_p)
+                last, rngs, temperature, top_k, top_p)
         else:
-            nxt, rngs2 = jnp.argmax(
-                logits[:, -1], axis=-1).astype(jnp.int32), rngs
+            nxt, rngs2 = jnp.argmax(last, axis=-1).astype(jnp.int32), rngs
         live = ~done
+        if guard:
+            # quarantine gate: a poisoned row freezes at THIS tick —
+            # nothing it would have emitted leaves the chunk
+            finite = jnp.all(jnp.isfinite(last), axis=-1)
+            bad = bad | (live & ~finite)
+            live = live & finite
+            done = done | bad
         # frozen rows: discard the lockstep output, keep all state.
         # (their page writes land at their frozen cache_len inside their
         # own — or the null — page, attended by nobody.)
@@ -168,7 +218,7 @@ def _decode_chunk(params, caches, tok, cache_len, tables, rngs,
         clen = jnp.where(live, clen + 1, clen)
         rngs = jnp.where(live[:, None], rngs2, rngs)
         tok = jnp.where(live[:, None], nxt[:, None], tok)
-        return (tok, clen, rngs, done, left, cs), (emit, live)
+        return (tok, clen, rngs, done, bad, left, cs), (emit, live)
 
     def step(carry, _):
         return jax.lax.cond(
@@ -176,11 +226,11 @@ def _decode_chunk(params, caches, tok, cache_len, tables, rngs,
             lambda op: (op, (op[0][:, 0], jnp.zeros((b,), bool))),
             live_step, carry)
 
-    carry0 = (tok, cache_len, rngs, done0, budget_left, caches)
-    (tok, cache_len, rngs, _, _, caches), (toks, lives) = jax.lax.scan(
+    carry0 = (tok, cache_len, rngs, done0, bad0, budget_left, caches)
+    (tok, cache_len, rngs, _, bad, _, caches), (toks, lives) = jax.lax.scan(
         step, carry0, None, length=ticks)
     counts = jnp.sum(lives.astype(jnp.int32), axis=0)
-    return toks, counts, tok, cache_len, rngs, caches
+    return toks, counts, bad, tok, cache_len, rngs, caches
 
 
 class ServingEngine:
@@ -208,6 +258,20 @@ class ServingEngine:
         through a content-hash :class:`PrefixIndex` (DESIGN.md §12).
         Auto-disabled for stacks with recurrent mixers — their per-slot
         state cannot be resumed from pages alone.
+    max_queue : bound on the waiting queue; a :meth:`submit` past it is
+        REJECTED (terminal status, counted in :attr:`fault_stats`)
+        instead of growing admission latency without limit.  None =
+        unbounded (the pre-§13 behavior).
+    nan_guard : compile the non-finite logit gate into the decode chunk
+        and prefill (DESIGN.md §13), quarantining poisoned rows as
+        FAILED.  Off reproduces the unguarded PR-7 hot path —
+        ``bench_serving.py`` measures the guard's overhead against it.
+    max_chunk_failures : consecutive decode-chunk exceptions tolerated
+        (snapshot-restore + degraded single-tick retry) before the
+        engine gives up with a RuntimeError.
+    fault_injector : optional
+        :class:`~repro.serving.faults.FaultInjector` consulted at the
+        chunk-boundary hook points (chaos testing).
     """
 
     def __init__(
@@ -226,6 +290,10 @@ class ServingEngine:
         eos_id: Optional[int] = None,
         seed: int = 0,
         prefix_caching: bool = True,
+        max_queue: Optional[int] = None,
+        nan_guard: bool = True,
+        max_chunk_failures: int = 3,
+        fault_injector=None,
     ):
         if cfg.window is not None:
             raise ValueError("paged KV caches do not support SWA windows")
@@ -236,6 +304,7 @@ class ServingEngine:
         self.params, self.cfg = params, cfg
         self.num_slots = num_slots
         self.ticks_per_sync = ticks_per_sync
+        self.configured_ticks_per_sync = ticks_per_sync
         self.max_pages = -(-max_seq_len // page_size)
         if num_pages is None:
             num_pages = num_slots * self.max_pages + 1
@@ -245,14 +314,33 @@ class ServingEngine:
         self.prefix_caching = bool(prefix_caching) and attn_only
         self.prefix_index = (PrefixIndex(self.pool)
                              if self.prefix_caching else None)
-        self.scheduler = Scheduler(self.pool, self.prefix_index)
+        self.scheduler = Scheduler(self.pool, self.prefix_index,
+                                   max_queue=max_queue)
         self.temperature, self.top_k, self.top_p = temperature, top_k, top_p
         self.eos_id = eos_id
+        self.nan_guard = bool(nan_guard)
+        self.max_chunk_failures = max_chunk_failures
+        self.injector = fault_injector
         self._base_key = jax.random.PRNGKey(seed)
         # prefix-cache observability (see prefix_stats)
         self.prefix_lookups = 0       # admissions that consulted the index
         self.prefix_hit_requests = 0  # admissions with >= 1 block hit
         self.prefix_pages_shared = 0  # hit pages mapped instead of prefilled
+        # fault-tolerance observability (see fault_stats)
+        self.rejected = 0             # bounded-queue admission rejects
+        self.cancelled = 0            # cancel() honored (waiting or active)
+        self.expired = 0              # deadline expiries (waiting or active)
+        self.failed = 0               # guard quarantines (prefill or decode)
+        self.guard_trips = 0          # non-finite detections by the guard
+        self.chunk_failures = 0       # decode-chunk exceptions recovered
+        self.alloc_failures = 0       # admission allocs that failed + retried
+        self.index_drops = 0          # verify() inconsistencies -> cache drop
+        self.queue_high_water = 0     # deepest the waiting queue ever got
+        self.degraded = False         # fell back to single-tick chunks
+        self.last_chunk_error: Optional[str] = None
+        self._consec_chunk_failures = 0
+        self._cancel_pending: Set[int] = set()
+        self._step_progress = False   # terminal/retry event this step
 
         # device state: page-pool caches per layer; recurrent mixers keep
         # ordinary per-slot rows (their state is O(1) per sequence)
@@ -278,6 +366,7 @@ class ServingEngine:
         self._topk = np.zeros((num_slots,), np.int32)      # 0: disabled
         self._topp = np.ones((num_slots,), np.float32)     # 1: disabled
         self.slots: List[Optional[_Slot]] = [None] * num_slots
+        self.requests: Dict[int, Request] = {}
         self.tick = 0
         self._next_rid = 0
         self.active_slot_ticks = 0
@@ -288,23 +377,71 @@ class ServingEngine:
     def submit(self, prompt, max_new: int, arrival: int = 0, *,
                temperature: Optional[float] = None,
                top_k: Optional[int] = None,
-               top_p: Optional[float] = None) -> int:
-        """Queue a request.  Per-request sampling params default to the
-        engine-level settings; pass e.g. ``temperature=0.0`` to force a
-        greedy stream inside a sampled engine (or vice versa)."""
+               top_p: Optional[float] = None,
+               deadline_ticks: Optional[int] = None) -> int:
+        """Queue a request and return its rid.  Per-request sampling
+        params default to the engine-level settings; pass e.g.
+        ``temperature=0.0`` to force a greedy stream inside a sampled
+        engine (or vice versa).  ``deadline_ticks`` bounds the request's
+        lifetime: unfinished by ``arrival + deadline_ticks`` engine
+        ticks, it is EXPIRED (waiting or mid-stream).
+
+        If the bounded waiting queue is full the request is REJECTED —
+        terminal immediately, visible via ``engine.requests[rid].status``
+        and the ``rejected`` counter — instead of queueing unboundedly;
+        callers shed the load rather than hiding it in latency."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      arrival=arrival, temperature=temperature,
-                      top_k=top_k, top_p=top_p)
         if max_new < 1 or prompt.size < 1:
             raise ValueError("need a non-empty prompt and max_new >= 1")
+        oob = np.nonzero((prompt < 0) | (prompt >= self.cfg.vocab))[0]
+        if oob.size:
+            pos = int(oob[0])
+            raise ValueError(
+                f"prompt token id {int(prompt[pos])} at position {pos} is "
+                f"outside [0, {self.cfg.vocab}); out-of-range ids would "
+                f"silently gather garbage embedding rows")
+        if deadline_ticks is not None and deadline_ticks < 1:
+            raise ValueError("deadline_ticks must be >= 1 (or None)")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      arrival=arrival, temperature=temperature,
+                      top_k=top_k, top_p=top_p,
+                      deadline_ticks=deadline_ticks)
         if self.pool.pages_for(req.budget_tokens) > self.max_pages:
             raise ValueError(
                 f"request needs {req.budget_tokens} tokens > "
                 f"max_seq_len {self.max_pages * self.pool.page_size}")
         self._next_rid += 1
-        self.scheduler.submit(req)
+        self.requests[req.rid] = req
+        if self.scheduler.submit(req):
+            self.queue_high_water = max(self.queue_high_water,
+                                        self.scheduler.pending)
+        else:
+            self.rejected += 1
         return req.rid
+
+    def cancel(self, rid: int) -> RequestStatus:
+        """Cancel a request.  Waiting requests leave the queue
+        immediately (CANCELLED, no tokens).  Active requests are marked
+        and released at the next chunk boundary — their pages return to
+        the pool refcount-correctly (prefix-index entries survive on
+        their own references) and the tokens emitted so far are kept.
+        Cancelling a terminal request is a no-op.  Returns the request's
+        status as of this call (CANCELLED once honored; ACTIVE means the
+        cancel is pending the boundary)."""
+        req = self.requests.get(rid)
+        if req is None:
+            raise KeyError(f"unknown request id {rid}")
+        if req.terminal:
+            return req.status
+        waiting = self.scheduler.remove(rid)
+        if waiting is not None:
+            self.scheduler.finish_waiting(
+                waiting, self.tick, RequestStatus.CANCELLED,
+                reason="cancelled while queued")
+            self.cancelled += 1
+            return RequestStatus.CANCELLED
+        self._cancel_pending.add(rid)
+        return req.status
 
     def sampling_for(self, req: Request):
         """The effective (temperature, top_k, top_p) a request decodes
@@ -329,8 +466,9 @@ class ServingEngine:
         if self.prefix_index is not None:
             for req in admitted:
                 pins.update(self.prefix_index.match(req.prompt))
-        for req in admitted:
-            slot = free.pop(0)
+        count = 0
+        for j, req in enumerate(admitted):
+            slot = free[0]
             hits: List[int] = []
             if self.prefix_index is not None:
                 self.prefix_lookups += 1
@@ -342,18 +480,48 @@ class ServingEngine:
                     and need > self.pool.free_pages):
                 self.prefix_index.evict(need - self.pool.free_pages,
                                         exclude=pins | set(hits))
+            try:
+                if self.injector is not None:
+                    self.injector.on_alloc(self, need)
+                fresh = self.pool.alloc_pages(need)
+            except RuntimeError:
+                # allocator failure (injected or real): nothing of this
+                # request is committed yet — requeue it and the rest of
+                # the batch in order and retry at a later boundary
+                self.alloc_failures += 1
+                self._step_progress = True
+                self.scheduler.requeue(admitted[j:])
+                break
+            free.pop(0)
             self.pool.share(hits)                 # map, don't recompute
-            pages = hits + self.pool.alloc_pages(need)
+            pages = hits + fresh
             self._tables[slot] = NULL_PAGE
             self._tables[slot, :total] = pages
             # prefill only the uncached tail; the match is capped one
             # token short of the prompt, so the tail is never empty and
             # every write lands past the shared region
             start = n_hit * self.pool.page_size
-            first, self.caches = _paged_prefill_step(
+            first, ok, self.caches = _paged_prefill_step(
                 self.params, jnp.asarray(req.prompt[start:][None]),
                 self.caches, jnp.asarray(self._tables[slot][None]),
-                jnp.asarray(slot, jnp.int32), cfg=self.cfg, start=start)
+                jnp.asarray(slot, jnp.int32), cfg=self.cfg, start=start,
+                guard=self.nan_guard)
+            if self.nan_guard and not bool(ok):
+                # poisoned prefill: quarantine before the request ever
+                # holds a slot — its pages (and any cached blocks that
+                # fed them) must never be mapped again
+                self.guard_trips += 1
+                self.failed += 1
+                self._step_progress = True
+                req.tokens = np.zeros((0,), np.int32)
+                if self.prefix_index is not None:
+                    self.prefix_index.drop_pages(pages)
+                self._tables[slot] = NULL_PAGE
+                self.scheduler.retire(
+                    req, pages, self.tick, status=RequestStatus.FAILED,
+                    reason="non-finite prefill logits (quarantined)")
+                free.insert(0, slot)
+                continue
             self._cache_len[slot] = req.prompt_len
             tok = int(first[0])
             req.first_token_time = time.perf_counter()
@@ -371,9 +539,11 @@ class ServingEngine:
             self._topk[slot] = k if k is not None else 0
             self._topp[slot] = p if p is not None else 1.0
             req.admitted_at = self.tick
+            req.status = RequestStatus.ACTIVE
             self.slots[slot] = _Slot(req=req, pages=pages, emitted=[tok])
+            count += 1
             self._maybe_finish(slot)
-        return len(admitted)
+        return count
 
     def _cow_guard(self, active: List[int]) -> None:
         """Enforce copy-on-write before a decode chunk: no row may write
@@ -409,6 +579,29 @@ class ServingEngine:
                 self._tables[i, idx] = new
                 s.pages[s.pages.index(pid)] = new
 
+    # -- lifecycle transitions ---------------------------------------------
+
+    def _release_slot(self, i: int, status: RequestStatus,
+                      reason: Optional[str] = None) -> None:
+        """Terminal transition for an active slot: record the tokens
+        emitted so far, clear the slot's host mirrors (table to the null
+        page, sampling params to engine-off defaults) and hand the pages
+        back through the scheduler (a refcount decrement under sharing —
+        prefix-index entries survive on their own references).  FAILED
+        rows additionally purge every index entry touching their pages:
+        quarantined K/V must never be mapped into a later table."""
+        s = self.slots[i]
+        s.req.tokens = np.asarray(s.emitted, np.int32)
+        if status is RequestStatus.FAILED and self.prefix_index is not None:
+            self.prefix_index.drop_pages(s.pages)
+        self.slots[i] = None
+        self._tables[i] = NULL_PAGE
+        self._cache_len[i] = 0
+        self._tok[i, 0] = 0
+        self._temp[i], self._topk[i], self._topp[i] = 0.0, 0, 1.0
+        self.scheduler.retire(s.req, s.pages, self.tick, status=status,
+                              reason=reason)
+
     def _maybe_finish(self, slot: int) -> None:
         s = self.slots[slot]
         if s is None:
@@ -416,18 +609,121 @@ class ServingEngine:
         if (len(s.emitted) >= s.req.max_new
                 or (self.eos_id is not None
                     and s.emitted[-1] == self.eos_id)):
-            s.req.tokens = np.asarray(s.emitted, np.int32)
-            self.slots[slot] = None
-            self._tables[slot] = NULL_PAGE
-            self._cache_len[slot] = 0
-            self._tok[slot, 0] = 0
-            self._temp[slot], self._topk[slot], self._topp[slot] = 0.0, 0, 1.0
-            self.scheduler.retire(s.req, s.pages, self.tick)
+            self._release_slot(slot, RequestStatus.FINISHED)
+
+    def _service_cancels(self) -> None:
+        """Honor pending cancels at the chunk boundary (the only point
+        where slot state is at rest on the host)."""
+        if not self._cancel_pending:
+            return
+        for i, s in enumerate(self.slots):
+            if s is not None and s.req.rid in self._cancel_pending:
+                self._cancel_pending.discard(s.req.rid)
+                self.cancelled += 1
+                self._step_progress = True
+                self._release_slot(
+                    i, RequestStatus.CANCELLED,
+                    reason="cancelled mid-stream at chunk boundary")
+        # anything left finished on its own before the boundary: drop
+        self._cancel_pending = {
+            rid for rid in self._cancel_pending
+            if not self.requests[rid].terminal}
+
+    def _service_deadlines(self) -> None:
+        """Expire overdue requests: waiting ones leave the queue with no
+        tokens; active ones are aborted at this boundary keeping their
+        partial stream."""
+        for _ in self.scheduler.expire(self.tick):
+            self.expired += 1
+            self._step_progress = True
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            dl = s.req.deadline
+            if dl is not None and self.tick >= dl:
+                self.expired += 1
+                self._step_progress = True
+                self._release_slot(
+                    i, RequestStatus.EXPIRED,
+                    reason=f"deadline (tick {dl}) passed mid-stream")
+
+    def _verify_index(self) -> None:
+        """Prefix-index self-check (DESIGN.md §13): on ANY inconsistency
+        drop the whole cache — released by the reference ledger, so the
+        pool stays exactly conserved even under entry corruption — and
+        keep serving uncached.  Active tables are untouched (their pages
+        live on the requests' own references), so in-flight streams stay
+        bit-identical; only future admissions lose the shared-prefix
+        shortcut until the index repopulates."""
+        if self.prefix_index is None:
+            return
+        issues = self.prefix_index.verify()
+        if issues:
+            self.prefix_index.clear()
+            self.index_drops += 1
+            self._step_progress = True
+
+    # -- crash-consistent stepping -----------------------------------------
+
+    def _snapshot(self):
+        """Copy of every host-mirrored slot vector, taken after the COW
+        guard and before the decode chunk: the restore point that keeps
+        engine invariants if the chunk raises mid-``step()``."""
+        return (self._tok.copy(), self._cache_len.copy(),
+                self._tables.copy(), self._rngs.copy(), self._temp.copy(),
+                self._topk.copy(), self._topp.copy())
+
+    def _restore(self, snap) -> None:
+        (self._tok, self._cache_len, self._tables, self._rngs,
+         self._temp, self._topk, self._topp) = (a.copy() for a in snap)
+
+    def _caches_alive(self) -> bool:
+        ok = True
+
+        def chk(x):
+            nonlocal ok
+            if isinstance(x, jax.Array) and x.is_deleted():
+                ok = False
+        jax.tree_util.tree_map(chk, self.caches)
+        return ok
+
+    def _recover_chunk_failure(self, snap, err: Exception) -> None:
+        """A decode chunk raised mid-``step()``: restore the snapshot so
+        every host mirror matches the last committed chunk boundary,
+        fall back to degraded single-tick chunks, and retry on the next
+        step.  Page writes the aborted chunk may have landed sit at
+        positions >= each row's (restored) cache_len — attended by
+        nobody, overwritten by the retry.  If the failure outlived the
+        donated cache buffers, or keeps repeating, the engine is
+        unrecoverable and says so loudly."""
+        self._restore(snap)
+        if not self._caches_alive():
+            raise RuntimeError(
+                "decode chunk failed after its cache donation was "
+                "consumed; engine state is unrecoverable") from err
+        self.chunk_failures += 1
+        self._consec_chunk_failures += 1
+        self._step_progress = True
+        self.last_chunk_error = repr(err)
+        if not self.degraded:
+            self.degraded = True
+            self.ticks_per_sync = 1       # smallest replayable unit
+        if self._consec_chunk_failures > self.max_chunk_failures:
+            raise RuntimeError(
+                f"{self._consec_chunk_failures} consecutive decode-chunk "
+                f"failures (last: {self.last_chunk_error}); giving up: "
+                f"{self._state()}") from err
 
     def step(self) -> int:
-        """One scheduler event: admit, then ONE on-device chunk of
-        ``ticks_per_sync`` decode steps.  Returns the number of requests
-        admitted this event."""
+        """One scheduler event: fault/lifecycle servicing, admission,
+        then ONE on-device chunk of ``ticks_per_sync`` decode steps.
+        Returns the number of requests admitted this event."""
+        self._step_progress = False
+        if self.injector is not None:
+            self.injector.on_step_start(self)
+        self._verify_index()
+        self._service_cancels()
+        self._service_deadlines()
         admitted = self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -438,21 +734,41 @@ class ServingEngine:
         for i in active:
             left[i] = self.slots[i].req.max_new - len(self.slots[i].emitted)
         ticks = self.ticks_per_sync
-        toks, counts, tok, clen, rngs, self.caches = _decode_chunk(
-            self.params, self.caches, jnp.asarray(self._tok),
-            jnp.asarray(self._cache_len), jnp.asarray(self._tables),
-            jnp.asarray(self._rngs), jnp.asarray(self._temp),
-            jnp.asarray(self._topk), jnp.asarray(self._topp),
-            jnp.asarray(left), cfg=self.cfg, ticks=ticks,
-            eos_id=self.eos_id, sampled=bool(np.any(self._temp > 0.0)))
+        snap = self._snapshot()
+        try:
+            if self.injector is not None:
+                self.injector.on_chunk_start(self, active)
+            toks, counts, bad, tok, clen, rngs, caches = _decode_chunk(
+                self.params, self.caches, jnp.asarray(self._tok),
+                jnp.asarray(self._cache_len), jnp.asarray(self._tables),
+                jnp.asarray(self._rngs), jnp.asarray(self._temp),
+                jnp.asarray(self._topk), jnp.asarray(self._topp),
+                jnp.asarray(left), cfg=self.cfg, ticks=ticks,
+                eos_id=self.eos_id, sampled=bool(np.any(self._temp > 0.0)),
+                guard=self.nan_guard)
+        except Exception as err:
+            self._recover_chunk_failure(snap, err)
+            self.tick += 1
+            return admitted
+        self._consec_chunk_failures = 0
+        self.caches = caches
         toks, counts = np.asarray(toks), np.asarray(counts)
+        bad = np.asarray(bad)
         self._tok = np.array(tok)
         self._cache_len = np.array(clen)
         self._rngs = np.array(rngs)
         for i in active:
             self.slots[i].emitted.extend(
                 int(t) for t in toks[:int(counts[i]), i])
-            self._maybe_finish(i)
+            if bad[i]:
+                self.guard_trips += 1
+                self.failed += 1
+                self._step_progress = True
+                self._release_slot(
+                    i, RequestStatus.FAILED,
+                    reason="non-finite decode logits (quarantined)")
+            else:
+                self._maybe_finish(i)
         self.active_slot_ticks += int(counts.sum())
         self.decode_ticks += ticks
         self.tick += ticks
@@ -476,6 +792,28 @@ class ServingEngine:
             "ref_high_water": self.pool.ref_high_water,
         }
 
+    @property
+    def fault_stats(self) -> Dict[str, int]:
+        """Fault-tolerance counters (DESIGN.md §13), exposed like
+        :attr:`prefix_stats`: queue depth/bound/high-water plus one
+        counter per lifecycle/fault event.  ``max_queue`` 0 means
+        unbounded."""
+        return {
+            "nan_guard": int(self.nan_guard),
+            "queue_depth": self.scheduler.pending,
+            "queue_high_water": self.queue_high_water,
+            "max_queue": self.scheduler.max_queue or 0,
+            "rejected": self.rejected,
+            "cancelled": self.cancelled,
+            "expired": self.expired,
+            "failed": self.failed,
+            "guard_trips": self.guard_trips,
+            "chunk_failures": self.chunk_failures,
+            "alloc_failures": self.alloc_failures,
+            "index_drops": self.index_drops,
+            "degraded": int(self.degraded),
+        }
+
     def release_prefix_cache(self) -> int:
         """Drop every cached prefix block (e.g. to fully drain the pool);
         pages still mapped by active requests survive through the
@@ -497,21 +835,29 @@ class ServingEngine:
                 f"pool={self.pool.free_pages}/{self.pool.num_pages - 1} "
                 f"pages free (page_size={self.pool.page_size}, "
                 f"max {self.max_pages} pages/request) "
-                f"prefix_cache={self.prefix_stats}")
+                f"prefix_cache={self.prefix_stats} "
+                f"faults={self.fault_stats}")
 
     def run(self, max_ticks: int = 100_000) -> Dict[int, Request]:
-        """Drive chunks until every submitted request has finished."""
+        """Drive chunks until every submitted request is terminal.
+        Returns every terminal request by rid — FINISHED streams plus
+        any CANCELLED / EXPIRED / FAILED / REJECTED ones (check
+        ``.status``; partial tokens are kept where the request ever held
+        a slot)."""
         while self.scheduler.pending or any(s is not None for s in self.slots):
             if self.tick >= max_ticks:
                 raise RuntimeError(
                     f"engine stalled after {max_ticks} ticks: {self._state()}")
             # a tick that starts fully idle with a due request and admits
-            # nothing can never make progress (no pages will ever free)
+            # nothing can never make progress (no pages will ever free) —
+            # unless this step made OTHER progress: a terminal transition
+            # (cancel/expire/reject), a transient allocator failure being
+            # retried, or a recovered chunk fault
             idle = all(s is None for s in self.slots)
             due = (self.scheduler.pending
                    and self.scheduler.waiting[0].arrival <= self.tick)
             admitted = self.step()
-            if idle and due and not admitted:
+            if idle and due and not admitted and not self._step_progress:
                 head = self.scheduler.waiting[0]
                 avail = self.pool.free_pages
                 if self.prefix_index is not None:

@@ -170,11 +170,25 @@ class PrefixIndex:
     ancestors before descendants (matching is prefix-contiguous), so the
     evictable entries form whole subtrees and :meth:`evictable_pages` is
     exactly what leaf-first eviction can realize.
+
+    **Fault tolerance (DESIGN.md §13).**  Alongside the entries the
+    index keeps ``_owned`` — a ledger of the pool references it has
+    taken, keyed by page id.  Entries are the *lookup* structure (and
+    may be corrupted by bugs or bit flips); the ledger is the
+    *accounting* ground truth, mutated only at ref-take/ref-release.
+    :meth:`verify` cross-checks the two (plus chain links, children
+    counts, and pool refcounts) and :meth:`clear` releases by ledger —
+    so a corrupted index can always be dropped without leaking or
+    double-freeing a single page, and the engine keeps serving without
+    the cache instead of handing poisoned page ids to new tables.
+    :meth:`drop_pages` quarantines entries touching a failed request's
+    pages (plus their descendant chains) the same way.
     """
 
     def __init__(self, pool: PagePool):
         self.pool = pool
         self._entries: "OrderedDict[int, _IndexEntry]" = OrderedDict()
+        self._owned: Dict[int, int] = {}     # page -> refs this index holds
         self.evictions = 0
 
     def __len__(self) -> int:
@@ -224,7 +238,7 @@ class PrefixIndex:
             if key in self._entries:
                 self._entries.move_to_end(key)
                 continue
-            self.pool.share([int(pages[i])])
+            self._take(int(pages[i]))
             self._entries[key] = _IndexEntry(page=int(pages[i]), parent=parent)
             pe = self._entries.get(parent) if parent is not None else None
             if pe is not None:
@@ -259,18 +273,105 @@ class PrefixIndex:
                 pe = self._entries.get(entry.parent)
                 if pe is not None:
                     pe.children -= 1
-            self.pool.free([entry.page])
+            self._release(entry.page)
             self.evictions += 1
             freed += 1
         return freed
 
+    # -- reference ledger (fault-tolerant accounting) ----------------------
+
+    def _take(self, page: int) -> None:
+        self.pool.share([page])
+        self._owned[page] = self._owned.get(page, 0) + 1
+
+    def _release(self, page: int) -> None:
+        """Release one index reference *if the ledger holds one* — the
+        ledger, not the (possibly corrupted) entry field, decides what
+        may be freed, so a scrambled entry can never double-free."""
+        if self._owned.get(page, 0) > 0:
+            self._owned[page] -= 1
+            if not self._owned[page]:
+                del self._owned[page]
+            self.pool.free([page])
+
+    def verify(self) -> List[str]:
+        """Self-check: cross-validate the lookup entries against the
+        reference ledger and the pool.  Returns a list of inconsistency
+        descriptions (empty == healthy).  Checked invariants:
+
+        * every entry's page is a valid, non-null, live (refcount >= 1)
+          pool page,
+        * the multiset of entry pages equals the ledger exactly (one
+          entry per owned reference — no orphan refs, no unref'd entry),
+        * every non-root parent link resolves to an existing entry,
+        * stored ``children`` counts match the actual link structure.
+
+        The engine runs this each step; on any report it drops the whole
+        cache via :meth:`clear` (ledger-exact, so no page leaks) and
+        keeps serving uncached rather than mapping poisoned pages into
+        new tables."""
+        issues: List[str] = []
+        counts: Dict[int, int] = {}
+        actual_children: Dict[int, int] = {}
+        for e in self._entries.values():
+            if e.parent is not None:
+                actual_children[e.parent] = \
+                    actual_children.get(e.parent, 0) + 1
+        for key, e in self._entries.items():
+            counts[e.page] = counts.get(e.page, 0) + 1
+            if not (0 < e.page < self.pool.num_pages):
+                issues.append(f"entry {key}: invalid page id {e.page}")
+            elif self.pool.refcount(e.page) < 1:
+                issues.append(f"entry {key}: page {e.page} is unreferenced")
+            if e.parent is not None and e.parent not in self._entries:
+                issues.append(f"entry {key}: dangling parent link")
+            want = actual_children.get(key, 0)
+            if e.children != want:
+                issues.append(f"entry {key}: children count {e.children} "
+                              f"!= actual {want}")
+        if counts != self._owned:
+            extra = {p: c for p, c in counts.items()
+                     if self._owned.get(p, 0) != c}
+            missing = {p: c for p, c in self._owned.items()
+                       if counts.get(p, 0) != c}
+            issues.append(f"entry pages diverge from owned-ref ledger "
+                          f"(entries {extra} vs ledger {missing})")
+        return issues
+
+    def drop_pages(self, pages: Iterable[int]) -> int:
+        """Quarantine: remove every entry whose page is in ``pages`` —
+        plus all descendant entries, so chains stay contiguous from the
+        root — releasing their ledger references.  Used when a request
+        FAILS the non-finite guard: its pages' cached K/V is suspect and
+        must never be mapped into a later table.  Returns entries
+        dropped."""
+        targets = {int(p) for p in pages}
+        doomed = {k for k, e in self._entries.items() if e.page in targets}
+        grew = True
+        while grew:          # descendants of doomed entries go too
+            grew = False
+            for k, e in self._entries.items():
+                if k not in doomed and e.parent in doomed:
+                    doomed.add(k)
+                    grew = True
+        for k in doomed:
+            e = self._entries.pop(k)
+            pe = self._entries.get(e.parent) if e.parent is not None else None
+            if pe is not None:
+                pe.children -= 1
+            self._release(e.page)
+        return len(doomed)
+
     def clear(self) -> int:
         """Release every index reference (pages still mapped by active
         requests stay alive through the requests' own refs).  Returns
-        the number of entries dropped."""
+        the number of entries dropped.  Frees by the *ledger*, not the
+        entries, so it is safe to call on a corrupted index — exactly
+        the references taken are returned, never more or less."""
         n = len(self._entries)
-        for e in self._entries.values():
-            self.pool.free([e.page])
+        for page, cnt in list(self._owned.items()):
+            self.pool.free([page] * cnt)
+        self._owned.clear()
         self._entries.clear()
         return n
 

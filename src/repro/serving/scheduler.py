@@ -18,18 +18,57 @@ same-tick sibling's hits) count as available — the engine evicts them
 leaf-first on demand.  The invariant is unchanged: once admitted, every
 page a request will ever write is privately owned, so it still runs to
 its last token without preemption.
+
+DESIGN.md §13 adds the request *lifecycle*: every request carries a
+:class:`RequestStatus` and ends in exactly one terminal state —
+
+    QUEUED ──admit──> ACTIVE ──────────────> FINISHED (EOS / budget)
+      │  │                │ │ │
+      │  │                │ │ └─ guard trip ─> FAILED   (quarantined)
+      │  │                │ └─── deadline ───> EXPIRED  (partial tokens)
+      │  │                └──── cancel() ────> CANCELLED(partial tokens)
+      │  ├──── cancel() ─────────────────────> CANCELLED(no tokens)
+      │  └──── deadline ─────────────────────> EXPIRED  (no tokens)
+      └ submit() over max_queue ─────────────> REJECTED (backpressure)
+
+The waiting queue is *bounded* (``max_queue``): an over-capacity
+:meth:`submit` marks the request REJECTED instead of growing the queue
+without limit — explicit admission-reject backpressure rather than
+unbounded latency.  Queue insertion is an ordered ``bisect.insort`` on
+the arrival key (stable for equal arrivals), replacing the former
+re-sort of the whole deque on every submit (O(n²) total under load).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from collections import deque
-from typing import Deque, List, Optional, Sequence, Set
+import enum
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from .pages import PagePool, PrefixIndex
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "RequestStatus", "Scheduler", "TERMINAL_STATUSES"]
+
+
+class RequestStatus(str, enum.Enum):
+    """Lifecycle states of a request (DESIGN.md §13).  The five
+    right-hand states are terminal; every submitted request reaches
+    exactly one of them."""
+    QUEUED = "queued"          # waiting for a slot + pages
+    ACTIVE = "active"          # holds a decode slot
+    FINISHED = "finished"      # EOS or budget exhausted — the happy path
+    CANCELLED = "cancelled"    # cancel(rid) honored (chunk boundary if active)
+    EXPIRED = "expired"        # deadline passed (waiting or mid-stream)
+    FAILED = "failed"          # quarantined by the non-finite guard
+    REJECTED = "rejected"      # bounded-queue admission reject (backpressure)
+
+
+TERMINAL_STATUSES = frozenset({
+    RequestStatus.FINISHED, RequestStatus.CANCELLED, RequestStatus.EXPIRED,
+    RequestStatus.FAILED, RequestStatus.REJECTED,
+})
 
 
 @dataclasses.dataclass
@@ -40,7 +79,13 @@ class Request:
     sampling defaults for this request alone — co-batched requests keep
     independent sampling because the decode chunk threads them through
     the scan as per-slot ``(B,)`` vectors (DESIGN.md §10).  ``None``
-    means "inherit the engine default"."""
+    means "inherit the engine default".
+
+    ``deadline_ticks`` is a per-request latency budget relative to
+    ``arrival``: once ``engine.tick`` reaches ``arrival +
+    deadline_ticks`` the request is EXPIRED — dropped from the queue if
+    still waiting, aborted at the next chunk boundary (keeping the
+    tokens emitted so far) if active."""
     rid: int
     prompt: np.ndarray            # (L,) int32 prompt tokens
     max_new: int                  # generation budget (incl. first token)
@@ -48,7 +93,10 @@ class Request:
     temperature: Optional[float] = None   # <= 0: greedy argmax
     top_k: Optional[int] = None
     top_p: Optional[float] = None
+    deadline_ticks: Optional[int] = None  # must FINISH by arrival + this
     # filled by the engine:
+    status: RequestStatus = RequestStatus.QUEUED
+    status_reason: Optional[str] = None   # human-readable terminal cause
     tokens: Optional[np.ndarray] = None   # emitted tokens, set on finish
     admitted_at: Optional[int] = None
     finished_at: Optional[int] = None
@@ -66,23 +114,94 @@ class Request:
         attended — kept for simplicity)."""
         return self.prompt_len + self.max_new
 
+    @property
+    def deadline(self) -> Optional[int]:
+        """Absolute engine tick this request must finish by, or None."""
+        if self.deadline_ticks is None:
+            return None
+        return self.arrival + self.deadline_ticks
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL_STATUSES
+
 
 class Scheduler:
     """FIFO queue + admission policy over a :class:`PagePool`, optionally
-    prefix-cache-aware via a :class:`PrefixIndex`."""
+    prefix-cache-aware via a :class:`PrefixIndex` and bounded at
+    ``max_queue`` waiting requests (None = unbounded)."""
 
-    def __init__(self, pool: PagePool, index: Optional[PrefixIndex] = None):
+    def __init__(self, pool: PagePool, index: Optional[PrefixIndex] = None,
+                 max_queue: Optional[int] = None):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
         self.pool = pool
         self.index = index
-        self.waiting: Deque[Request] = deque()
-        self.finished: List[Request] = []
+        self.max_queue = max_queue
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []      # every TERMINAL request
 
-    def submit(self, req: Request) -> None:
-        # keep the queue in (arrival, submit-order) order: an early-arrival
-        # request submitted late must not sit behind an unarrived head
-        # (admit() only ever pops the head)
-        self.waiting.append(req)
-        self.waiting = deque(sorted(self.waiting, key=lambda r: r.arrival))
+    def submit(self, req: Request) -> bool:
+        """Queue a request, or REJECT it if the bounded queue is full.
+        Returns True iff the request was queued.
+
+        The queue is kept in (arrival, submit-order) order — an
+        early-arrival request submitted late must not sit behind an
+        unarrived head (admit() only ever pops the head).  Ordered
+        insertion via ``bisect.insort`` is O(log n) compares + one O(n)
+        list shift per submit, replacing the former full re-sort on
+        every call; ``insort``'s insert-after-equals keeps equal-arrival
+        requests in submit order, exactly matching the stable sort it
+        replaced."""
+        if self.max_queue is not None and len(self.waiting) >= self.max_queue:
+            self.finish_waiting(
+                req, tick=None, status=RequestStatus.REJECTED,
+                reason=f"queue full ({self.max_queue} waiting)")
+            return False
+        bisect.insort(self.waiting, req, key=lambda r: r.arrival)
+        return True
+
+    def requeue(self, reqs: Sequence[Request]) -> None:
+        """Put not-yet-started admissions back (e.g. after an allocator
+        failure mid-admission): insort_left places each request *before*
+        equal-arrival waiters, restoring its original queue position;
+        inserting in reverse keeps the batch's own relative order."""
+        for req in reversed(list(reqs)):
+            bisect.insort_left(self.waiting, req, key=lambda r: r.arrival)
+
+    def remove(self, rid: int) -> Optional[Request]:
+        """Pull a waiting request out of the queue (cancel path).
+        Returns it, or None if ``rid`` is not waiting."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                return self.waiting.pop(i)
+        return None
+
+    def expire(self, tick: int) -> List[Request]:
+        """Sweep the queue for requests whose deadline has passed:
+        each is removed and marked EXPIRED (terminal, no tokens)."""
+        out = []
+        keep = []
+        for r in self.waiting:
+            if r.deadline is not None and tick >= r.deadline:
+                self.finish_waiting(
+                    r, tick, RequestStatus.EXPIRED,
+                    reason=f"deadline {r.deadline} passed while queued")
+                out.append(r)
+            else:
+                keep.append(r)
+        if out:
+            self.waiting = keep
+        return out
+
+    def finish_waiting(self, req: Request, tick: Optional[int],
+                        status: RequestStatus, reason: str) -> None:
+        """Terminal transition for a request that never held a slot."""
+        req.status = status
+        req.status_reason = reason
+        req.tokens = np.zeros((0,), np.int32)
+        req.finished_at = tick
+        self.finished.append(req)
 
     def pages_needed(self, req: Request) -> int:
         """Private pages the request would need right now: its full
@@ -105,7 +224,7 @@ class Scheduler:
         pages), so the reservation is a safe upper bound."""
         out: List[Request] = []
         reserved = 0   # pages already committed to this tick's admissions
-        pinned: Set[int] = set()
+        pinned: set = set()
         while self.waiting and free_slots > 0:
             head = self.waiting[0]
             if head.arrival > tick:
@@ -122,14 +241,19 @@ class Scheduler:
                 break  # head-of-line blocks until pages free up
             reserved += need
             pinned.update(hits)
-            out.append(self.waiting.popleft())
+            out.append(self.waiting.pop(0))
             free_slots -= 1
         return out
 
-    def retire(self, req: Request, pages: Sequence[int], tick: int) -> None:
-        """Release the request's references.  Under sharing this is a
-        refcount decrement: a page returns to the free list only when no
-        other table (and no prefix-index entry) still maps it."""
+    def retire(self, req: Request, pages: Sequence[int], tick: int,
+               status: RequestStatus = RequestStatus.FINISHED,
+               reason: Optional[str] = None) -> None:
+        """Release the request's references and record its terminal
+        status.  Under sharing the free is a refcount decrement: a page
+        returns to the free list only when no other table (and no
+        prefix-index entry) still maps it."""
+        req.status = status
+        req.status_reason = reason
         req.finished_at = tick
         self.pool.free(pages)
         self.finished.append(req)

@@ -239,3 +239,140 @@ def test_prefix_index_roundtrip_retire_and_eviction():
     assert idx.evictable_pages() == 1
     assert idx.clear() == 1
     assert pool.free_pages == 19
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance (DESIGN.md §13): the owned-refs ledger, verify(),
+# drop_pages() quarantine, and clear()-under-corruption
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prefix_index_ledger_trace_invariants(seed):
+    """Random insert/evict/drop_pages/clear traces: at every step the
+    owned-refs ledger must equal the entries' page multiset, ``verify``
+    must report healthy, and the pool must balance exactly against
+    request refs + ledger refs (conservation under quarantine)."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=24, page_size=4)
+    idx = PrefixIndex(pool)
+    request_pages = []              # pages live requests still map
+
+    def check():
+        assert idx.verify() == []
+        entry_pages = {}
+        for e in idx._entries.values():
+            entry_pages[e.page] = entry_pages.get(e.page, 0) + 1
+        assert entry_pages == idx._owned
+        live = sum(len(ps) for ps in request_pages) + sum(idx._owned.values())
+        assert pool.live_refs() == live
+        held = {p for ps in request_pages for p in ps} | set(idx._owned)
+        assert pool.free_pages == 23 - len(held)
+
+    for _ in range(40):
+        op = rng.choice(["insert", "retire", "evict", "drop", "clear"])
+        if op == "insert" and pool.free_pages >= 3:
+            prompt = rng.integers(0, 50, size=int(rng.integers(4, 13)))
+            n = pool.pages_for(len(prompt))
+            hits = idx.match(prompt.astype(np.int32))
+            if pool.free_pages >= n - len(hits):
+                pool.share(hits)
+                pages = hits + pool.alloc_pages(n - len(hits))
+                idx.insert(prompt.astype(np.int32), pages)
+                request_pages.append(pages)
+        elif op == "retire" and request_pages:
+            pool.free(request_pages.pop(int(rng.integers(len(request_pages)))))
+        elif op == "evict":
+            idx.evict(int(rng.integers(1, 4)))
+        elif op == "drop" and idx._owned:
+            victims = rng.choice(sorted(idx._owned),
+                                 size=min(2, len(idx._owned)), replace=False)
+            idx.drop_pages(int(v) for v in victims)
+        elif op == "clear":
+            idx.clear()
+            assert not idx._owned and not len(idx)
+        check()
+
+    for ps in request_pages:
+        pool.free(ps)
+    idx.clear()
+    assert pool.free_pages == 23 and pool.live_refs() == 0
+
+
+def test_prefix_index_verify_catches_corruption_and_clear_is_safe():
+    """Scrambled entries must be DETECTED by verify() and releasable by
+    clear() without a leak or double-free — the ledger, not the corrupt
+    entry fields, decides what returns to the pool."""
+    rng = np.random.default_rng(11)
+    pool = PagePool(num_pages=20, page_size=4)
+    idx = PrefixIndex(pool)
+    a = rng.integers(0, 100, size=12).astype(np.int32)
+    pages = pool.alloc_pages(3)
+    idx.insert(a, pages)
+    assert idx.verify() == []
+
+    # corruption 1: page field scrambled to a DIFFERENT owned page
+    victim = next(iter(idx._entries.values()))
+    orig = victim.page
+    victim.page = pages[(pages.index(orig) + 1) % 3]
+    assert any("ledger" in s for s in idx.verify())
+    victim.page = orig
+    assert idx.verify() == []
+
+    # corruption 2: page field scrambled to the null page
+    victim.page = 0
+    assert any("invalid page" in s for s in idx.verify())
+    victim.page = orig
+
+    # corruption 3: children count drifts
+    victim.children += 1
+    assert any("children" in s for s in idx.verify())
+    victim.children -= 1
+
+    # corruption 4: dangling parent link
+    leaf = list(idx._entries.values())[-1]
+    keep_parent = leaf.parent
+    leaf.parent = 123456789
+    reports = idx.verify()
+    assert any("dangling parent" in s for s in reports)
+    leaf.parent = keep_parent
+
+    # clear() under ANY of the above frees exactly the taken refs:
+    victim.page = 0                       # corrupt again, then drop all
+    assert idx.clear() == 3
+    pool.free(pages)                      # the request's own refs
+    assert pool.free_pages == 19 and pool.live_refs() == 0
+    with pytest.raises(ValueError):       # and not one ref more
+        pool.free([pages[0]])
+
+
+def test_prefix_index_drop_pages_quarantines_descendants():
+    """drop_pages must remove the targeted blocks AND every descendant
+    entry (chains stay root-contiguous), while unrelated branches keep
+    matching."""
+    rng = np.random.default_rng(12)
+    pool = PagePool(num_pages=20, page_size=4)
+    idx = PrefixIndex(pool)
+    a = rng.integers(0, 100, size=16).astype(np.int32)   # 4 blocks
+    a_pages = pool.alloc_pages(4)
+    idx.insert(a, a_pages)
+    b = np.concatenate([a[:4], rng.integers(100, 200, size=8)]).astype(np.int32)
+    hits = idx.match(b)
+    assert hits == a_pages[:1]
+    pool.share(hits)
+    b_pages = hits + pool.alloc_pages(2)
+    idx.insert(b, b_pages)
+    assert len(idx) == 6
+
+    # quarantine a's block 1: blocks 2/3 are its descendants and go too;
+    # the shared root (block 0) and b's branch survive
+    assert idx.drop_pages([a_pages[1]]) == 3
+    assert idx.match(a) == a_pages[:1]
+    assert idx.match(b) == b_pages[:2]      # proper-prefix cap: 2 blocks
+    assert idx.verify() == []
+    # dropping the shared root kills everything
+    assert idx.drop_pages([a_pages[0]]) == 3
+    assert len(idx) == 0 and idx.verify() == []
+    pool.free(a_pages)
+    pool.free(b_pages)
+    assert pool.free_pages == 19 and pool.live_refs() == 0

@@ -131,6 +131,26 @@ def test_scheduler_orders_queue_by_arrival_not_submit_order():
     assert [r.rid for r in sched.admit(tick=0, free_slots=2)] == [1]
 
 
+def test_scheduler_insort_matches_stable_sort_semantics():
+    """Regression for the O(n log n)-total ordered-insert queue: random
+    submit traffic (with duplicate arrivals) must leave the queue in
+    EXACTLY the order the old per-submit stable re-sort produced —
+    sorted by arrival, equal arrivals in submit order."""
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        pool = PagePool(num_pages=64, page_size=4)
+        sched = Scheduler(pool)
+        reqs = []
+        for rid in range(int(rng.integers(1, 40))):
+            r = Request(rid=rid, prompt=np.zeros(2, np.int32), max_new=2,
+                        arrival=int(rng.integers(0, 6)))  # heavy duplicates
+            reqs.append(r)
+            sched.submit(r)
+        reference = sorted(reqs, key=lambda r: r.arrival)  # stable
+        assert [r.rid for r in sched.waiting] == \
+            [r.rid for r in reference], f"trial {trial}"
+
+
 # ---------------------------------------------------------------------------
 # Paged attention_decode == contiguous attention_decode
 # ---------------------------------------------------------------------------

@@ -1,0 +1,418 @@
+"""Fault-tolerant serving (DESIGN.md §13): lifecycle, backpressure,
+quarantine, crash-consistent stepping, and the chaos harness.
+
+The load-bearing property here mirrors the engine's bit-identity
+guarantee from test_serving_engine.py, under faults: whatever happens to
+one request — NaN quarantine, cancellation, deadline expiry, a crash at
+the chunk boundary — every OTHER co-batched stream must keep emitting
+exactly the tokens it would emit decoded alone, and the page pool must
+conserve pages exactly (never leak, never double-free).
+"""
+import numpy as np
+import pytest
+
+from repro.serving import (
+    FaultInjector,
+    InjectedFault,
+    Request,
+    RequestStatus,
+    Scheduler,
+    ServingEngine,
+    TERMINAL_STATUSES,
+    alloc_failure,
+    chunk_exception,
+    index_corruption,
+    nan_logit,
+)
+from test_serving_engine import _smoke_pair, _solo
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    return _smoke_pair()
+
+
+def _prompts(rng, cfg, lens):
+    return [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+            for l in lens]
+
+
+def _pool_conserved(eng):
+    """Exact refcount accounting: every pool reference is attributable
+    to an active slot's table or the prefix-index ledger, and the free
+    list holds exactly the rest."""
+    refs = {}
+    for s in eng.slots:
+        if s is not None:
+            for p in s.pages:
+                refs[p] = refs.get(p, 0) + 1
+    if eng.prefix_index is not None:
+        for p, c in eng.prefix_index._owned.items():
+            refs[p] = refs.get(p, 0) + c
+    for p in range(1, eng.pool.num_pages):
+        assert eng.pool.refcount(p) == refs.get(p, 0), \
+            f"page {p}: pool says {eng.pool.refcount(p)}, " \
+            f"slots+ledger say {refs.get(p, 0)}"
+    assert eng.pool.free_pages == (eng.pool.num_pages - 1) - len(refs)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: submit-time validation + bounded-queue backpressure
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_out_of_range_token_ids(smoke):
+    cfg, params, _ = smoke
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16)
+    bad = np.array([1, 2, cfg.vocab, 3], np.int32)
+    with pytest.raises(ValueError, match=f"id {cfg.vocab} at position 2"):
+        eng.submit(bad, 4)
+    with pytest.raises(ValueError, match="id -1 at position 0"):
+        eng.submit(np.array([-1, 2], np.int32), 4)
+    # a rejected submit consumes nothing: no rid, no queue entry
+    assert not eng.requests and eng.scheduler.pending == 0
+
+
+def test_bounded_queue_rejects_over_capacity(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(0)
+    prompts = _prompts(rng, cfg, [5, 7, 6, 5])
+    eng = ServingEngine(params, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, max_queue=2)
+    rids = [eng.submit(p, 3) for p in prompts]
+    # slot admission happens at step time, so all 4 queue-or-reject now:
+    # 2 fit the bounded queue, 2 are REJECTED terminally
+    statuses = [eng.requests[r].status for r in rids]
+    assert statuses[:2] == [RequestStatus.QUEUED] * 2
+    assert statuses[2:] == [RequestStatus.REJECTED] * 2
+    for r in rids[2:]:
+        assert eng.requests[r].terminal
+        assert len(eng.requests[r].tokens) == 0
+        assert "queue full" in eng.requests[r].status_reason
+    stats = eng.fault_stats
+    assert stats["rejected"] == 2 and stats["max_queue"] == 2
+    assert stats["queue_depth"] == 2 == stats["queue_high_water"]
+    # the queued requests serve normally and bit-match solo
+    done = eng.run()
+    assert len(done) == 4
+    for r, p in zip(rids[:2], prompts[:2]):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(done[r].tokens, _solo(cfg, params, p, 3))
+    _pool_conserved(eng)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: cancellation + deadlines
+# ---------------------------------------------------------------------------
+
+def test_cancel_waiting_and_active(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(1)
+    prompts = _prompts(rng, cfg, [5, 9, 7])
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2)
+    r0 = eng.submit(prompts[0], 6)
+    r1 = eng.submit(prompts[1], 6)
+    r2 = eng.submit(prompts[2], 6, arrival=50)       # stays waiting
+    # waiting cancel: immediate, no tokens, queue entry gone
+    assert eng.cancel(r2) is RequestStatus.CANCELLED
+    assert eng.requests[r2].terminal
+    assert len(eng.requests[r2].tokens) == 0
+    assert eng.scheduler.pending == 2
+    eng.step()                                       # admit r0/r1, 2 ticks
+    # active cancel: pending until the chunk boundary, then honored with
+    # the partial stream intact
+    assert eng.cancel(r1) is RequestStatus.ACTIVE
+    assert eng.requests[r1].status is RequestStatus.ACTIVE
+    eng.step()
+    req = eng.requests[r1]
+    assert req.status is RequestStatus.CANCELLED
+    assert 0 < len(req.tokens) < 6
+    np.testing.assert_array_equal(                  # partials are correct
+        req.tokens, _solo(cfg, params, prompts[1], 6)[:len(req.tokens)])
+    _pool_conserved(eng)                            # release was refcount-exact
+    # cancelling a terminal request is a no-op
+    assert eng.cancel(r1) is RequestStatus.CANCELLED
+    assert eng.fault_stats["cancelled"] == 2
+    with pytest.raises(KeyError):
+        eng.cancel(999)
+    # the survivor never noticed: bit-identical to its solo decode
+    done = eng.run()
+    np.testing.assert_array_equal(done[r0].tokens,
+                                  _solo(cfg, params, prompts[0], 6))
+    # prefix-index entries outlive the cancelled request (readmit reuse):
+    # dropping the cache must still drain the pool exactly
+    eng.release_prefix_cache()
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+
+
+def test_deadline_expires_waiting_and_active(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(2)
+    prompts = _prompts(rng, cfg, [5, 9])
+    eng = ServingEngine(params, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2)
+    # one slot: r1 waits behind r0; r0's deadline aborts it mid-stream,
+    # r1's deadline passes while it is still queued
+    r0 = eng.submit(prompts[0], 10, deadline_ticks=5)
+    r1 = eng.submit(prompts[1], 7, deadline_ticks=3)
+    done = eng.run()
+    assert done[r0].status is RequestStatus.EXPIRED
+    assert 0 < len(done[r0].tokens) < 10            # partial stream kept
+    np.testing.assert_array_equal(
+        done[r0].tokens,
+        _solo(cfg, params, prompts[0], 10)[:len(done[r0].tokens)])
+    assert done[r1].status is RequestStatus.EXPIRED
+    assert len(done[r1].tokens) == 0                # never held a slot
+    assert "queued" in done[r1].status_reason
+    assert eng.fault_stats["expired"] == 2
+    _pool_conserved(eng)
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        eng.submit(prompts[0], 2, deadline_ticks=0)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: NaN quarantine — the pinned fault-isolation property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "packed"])
+def test_nan_guard_quarantines_only_poisoned_row(smoke, kind):
+    """Poison one request's K/V pages mid-stream: the guard must fail
+    ONLY that row (terminal FAILED, partial pre-poison tokens correct,
+    pages freed and purged from the prefix index) while every co-batched
+    stream stays bit-identical to its solo decode — for dense AND
+    packed-BSR params."""
+    cfg, dense, packed = smoke
+    params = dense if kind == "dense" else packed
+    rng = np.random.default_rng(3)
+    prompts = _prompts(rng, cfg, [5, 9, 7])
+    inj = FaultInjector([nan_logit(2, rid=1)], seed=0)
+    eng = ServingEngine(params, cfg, num_slots=3, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2,
+                        fault_injector=inj)
+    for p in prompts:
+        eng.submit(p, 6)
+    done = eng.run()
+    assert not inj.pending
+    assert done[1].status is RequestStatus.FAILED
+    assert "non-finite" in done[1].status_reason
+    # tokens emitted BEFORE the poison are clean: a solo-stream prefix
+    solo1 = _solo(cfg, params, prompts[1], 6)
+    assert 0 < len(done[1].tokens) < 6
+    np.testing.assert_array_equal(done[1].tokens,
+                                  solo1[:len(done[1].tokens)])
+    # fault isolation: the other rows never noticed
+    for r in (0, 2):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, params, prompts[r], 6))
+    stats = eng.fault_stats
+    assert stats["failed"] == 1 and stats["guard_trips"] == 1
+    # quarantined pages left the prefix index too: nothing in the cache
+    # can hand poisoned K/V to a later admission, and the pool conserves
+    _pool_conserved(eng)
+    eng.release_prefix_cache()
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+
+
+def test_nan_guard_off_reproduces_unguarded_path(smoke):
+    """nan_guard=False compiles the PR-7 chunk (no finite checks): clean
+    traffic must serve identically — this is the bench baseline."""
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(4)
+    prompts = _prompts(rng, cfg, [5, 9])
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2, nan_guard=False)
+    rids = [eng.submit(p, 6) for p in prompts]
+    done = eng.run()
+    for r, p in zip(rids, prompts):
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, params, p, 6))
+    assert eng.fault_stats["nan_guard"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: crash-consistent stepping
+# ---------------------------------------------------------------------------
+
+def test_chunk_exception_restores_snapshot_and_degrades(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, cfg, [5, 9])
+    inj = FaultInjector([chunk_exception(2)], seed=0)
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2,
+                        fault_injector=inj)
+    rids = [eng.submit(p, 6) for p in prompts]
+    done = eng.run()
+    # the crash cost wall-clock, not correctness: every stream completes
+    # bit-identically to solo (the snapshot restore put every host
+    # mirror back to the last committed boundary)
+    for r, p in zip(rids, prompts):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, params, p, 6))
+    stats = eng.fault_stats
+    assert stats["chunk_failures"] == 1
+    assert stats["degraded"] == 1
+    assert eng.ticks_per_sync == 1                  # smallest replayable unit
+    assert eng.configured_ticks_per_sync == 2
+    assert "InjectedFault" in eng.last_chunk_error
+    _pool_conserved(eng)
+
+
+def test_repeated_chunk_failures_give_up_loudly(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(6)
+    [p] = _prompts(rng, cfg, [5])
+    inj = FaultInjector([chunk_exception(t) for t in range(40)], seed=0)
+    eng = ServingEngine(params, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, max_chunk_failures=3,
+                        fault_injector=inj)
+    eng.submit(p, 8)
+    with pytest.raises(RuntimeError, match="consecutive decode-chunk"):
+        eng.run()
+    assert eng.fault_stats["chunk_failures"] == 4   # 3 tolerated + final
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: prefix-index self-check + alloc-failure unwinding
+# ---------------------------------------------------------------------------
+
+def test_index_corruption_detected_dropped_and_served_through(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, cfg, [9, 9, 7])
+    inj = FaultInjector([index_corruption(3)], seed=0)
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2,
+                        fault_injector=inj)
+    rids = [eng.submit(p, 6, arrival=a)
+            for p, a in zip(prompts, (0, 0, 6))]
+    done = eng.run()
+    assert [k for k, _, _ in inj.fired] == ["index_corrupt"]
+    assert eng.fault_stats["index_drops"] == 1
+    # serving continued (merely uncached) and every stream is exact
+    for r, p in zip(rids, prompts):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, params, p, 6))
+    # the drop released by ledger: conservation is exact even though an
+    # entry's page field was scrambled when the cache was released
+    _pool_conserved(eng)
+    eng.release_prefix_cache()
+    assert eng.pool.free_pages == eng.pool.num_pages - 1
+
+
+def test_alloc_failure_unwinds_and_retries(smoke):
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(8)
+    prompts = _prompts(rng, cfg, [5, 7])
+    inj = FaultInjector([alloc_failure(0, count=2)], seed=0)
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, fault_injector=inj)
+    rids = [eng.submit(p, 6) for p in prompts]
+    done = eng.run()
+    assert eng.fault_stats["alloc_failures"] == 2
+    # both admissions were unwound (no leaked refs) and re-admitted in
+    # their original order on later ticks
+    assert done[rids[0]].admitted_at <= done[rids[1]].admitted_at
+    for r, p in zip(rids, prompts):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, params, p, 6))
+    _pool_conserved(eng)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: property-based chaos traces — conservation under any mix
+# ---------------------------------------------------------------------------
+
+def test_property_chaos_traces_conserve_pages(smoke):
+    """Randomized admit/cancel/expire/fail/crash traces: after EVERY
+    engine step the page pool must balance exactly against the active
+    tables plus the index ledger (never a leaked or double-freed page),
+    every request must end in exactly one terminal status, and draining
+    the cache must return the pool to fully free."""
+    cfg, params, _ = smoke
+    for seed in range(6):
+        rng = np.random.default_rng(100 + seed)
+        faults = []
+        for t in sorted(rng.integers(0, 12, size=3)):
+            kind = rng.choice(["nan", "alloc", "chunk", "corrupt"])
+            faults.append({"nan": nan_logit(int(t)),
+                           "alloc": alloc_failure(int(t)),
+                           "chunk": chunk_exception(int(t)),
+                           "corrupt": index_corruption(int(t))}[kind])
+        inj = FaultInjector(faults, seed=seed)
+        eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                            max_seq_len=16,
+                            ticks_per_sync=int(rng.choice([1, 2])),
+                            max_queue=4, fault_injector=inj)
+        rids = []
+        for _ in range(int(rng.integers(3, 7))):
+            prompt = rng.integers(0, cfg.vocab,
+                                  size=int(rng.integers(3, 10)))
+            dl = (int(rng.integers(2, 15))
+                  if rng.integers(3) == 0 else None)
+            rids.append(eng.submit(prompt.astype(np.int32),
+                                   int(rng.integers(2, 7)),
+                                   arrival=int(rng.integers(0, 8)),
+                                   deadline_ticks=dl))
+        steps = 0
+        while (eng.scheduler.pending
+               or any(s is not None for s in eng.slots)
+               or not all(eng.requests[r].terminal for r in rids)):
+            if rng.integers(4) == 0 and rids:
+                eng.cancel(int(rng.choice(rids)))
+            eng.step()
+            _pool_conserved(eng)                   # after EVERY step
+            steps += 1
+            assert steps < 200, f"trace {seed} did not converge"
+        for r in rids:
+            req = eng.requests[r]
+            assert req.status in TERMINAL_STATUSES, (seed, r, req.status)
+            assert req.tokens is not None
+        eng.release_prefix_cache()
+        assert eng.pool.free_pages == eng.pool.num_pages - 1, seed
+        assert eng.pool.live_refs() == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: scheduler bounded queue + ordered-insert unit coverage
+# ---------------------------------------------------------------------------
+
+def test_scheduler_bounded_queue_unit():
+    from repro.serving import PagePool
+    pool = PagePool(num_pages=64, page_size=4)
+    sch = Scheduler(pool, max_queue=2)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32), max_new=2)
+            for i in range(4)]
+    assert sch.submit(reqs[0]) and sch.submit(reqs[1])
+    assert not sch.submit(reqs[2]) and not sch.submit(reqs[3])
+    assert [r.rid for r in sch.waiting] == [0, 1]
+    assert reqs[2].status is RequestStatus.REJECTED
+    assert reqs[2] in sch.finished
+    # draining the queue reopens admission
+    sch.admit(0, free_slots=2)
+    r4 = Request(rid=4, prompt=np.arange(4, dtype=np.int32), max_new=2)
+    assert sch.submit(r4)
+    with pytest.raises(ValueError, match="max_queue"):
+        Scheduler(pool, max_queue=0)
+
+
+def test_scheduler_requeue_restores_head_position():
+    from repro.serving import PagePool
+    pool = PagePool(num_pages=64, page_size=4)
+    sch = Scheduler(pool)
+    mk = lambda rid, arr: Request(rid=rid, max_new=2, arrival=arr,
+                                  prompt=np.arange(4, dtype=np.int32))
+    for rid, arr in ((0, 0), (1, 0), (2, 1)):
+        sch.submit(mk(rid, arr))
+    got = sch.admit(1, free_slots=3)
+    assert [r.rid for r in got] == [0, 1, 2]
+    # alloc failed mid-batch: requeueing [1, 2] must put 1 back BEFORE
+    # any later equal-arrival submit and keep batch order
+    sch.submit(mk(3, 0))
+    sch.requeue(got[1:])
+    assert [r.rid for r in sch.waiting] == [1, 3, 2]
