@@ -63,7 +63,9 @@ def _bench_paged_attention(
     max_pages = -(-max_len // page_size)
     n_pages = batch * max_pages + 1
     key = jax.random.PRNGKey(0)
-    p = attention_init(key, d_model, num_heads, kv_heads, head_dim)
+    # key is only ever a fold_in parent — each consumer gets its own child
+    p = attention_init(jax.random.fold_in(key, 0), d_model, num_heads,
+                       kv_heads, head_dim)
     x = jax.random.normal(jax.random.fold_in(key, 1), (batch, 1, d_model))
     pool_k = jax.random.normal(
         jax.random.fold_in(key, 2), (n_pages, page_size, kv_heads, head_dim))
@@ -390,6 +392,7 @@ def bench_serving(
     # at the longest swept context.
     paged = _bench_paged_attention(reps=max(reps * 4, 8))
     return {
+        "analysis": _bench_analysis(),
         "config": {
             "arch": cfg.name, "d_model": d_model, "d_ff": d_ff,
             "n_layers": n_layers, "batch": batch, "prompt_len": prompt_len,
@@ -408,6 +411,33 @@ def bench_serving(
         "prefix_caching": pc,
         "fault_tolerance": ft,
         "paged_attention": paged,
+    }
+
+
+def _bench_analysis() -> Dict[str, Any]:
+    """Time the static-analysis sweep (DESIGN.md §14) over the tree.
+
+    check.sh runs the same sweep as a gate; the committed numbers keep
+    the analyzer honest about staying interactive (~1-2s) as the tree
+    grows, and record the finding census the baseline carries.
+    """
+    from pathlib import Path
+
+    from repro.analysis import lint
+
+    root = Path(__file__).resolve().parents[1]
+    t0 = time.perf_counter()
+    report = lint.run_project(root)
+    runtime_ms = (time.perf_counter() - t0) * 1e3
+    return {
+        "runtime_ms": runtime_ms,
+        "files_scanned": report.files_scanned,
+        "findings": len(report.findings),
+        "new": len(report.diff.new),
+        "baselined": len(report.diff.known),
+        "stale": len(report.diff.stale),
+        "inline_suppressed": report.inline_suppressed,
+        "by_rule": report.by_rule(),
     }
 
 
@@ -460,6 +490,11 @@ def main(quick: bool = False):
         f"ctx{longest} fused={row['fused_tok_s']:.0f}tok/s "
         f"gather={row['gather_tok_s']:.0f}tok/s "
         f"({pa['speedup_at_longest']:.2f}x)")
+    an = r["analysis"]
+    lines.append(
+        f"static_analysis,{an['runtime_ms'] * 1e3:.0f},"
+        f"{an['files_scanned']} files {an['findings']} findings "
+        f"({an['new']} new, {an['baselined']} baselined)")
     return lines
 
 

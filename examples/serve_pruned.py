@@ -65,13 +65,11 @@ def main():
     b, plen, steps = 4, 8, 16
     caches = init_caches(cfg, b, plen + steps, jnp.float32)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (b, plen), 0, cfg.vocab)
-    logits, caches = jax.jit(
-        lambda p, c, t: lm_prefill(p, c, {"tokens": t}, cfg)
-    )(packed, caches, prompt)
+    prefill_fn = jax.jit(lambda p, c, t: lm_prefill(p, c, {"tokens": t}, cfg))
+    generate_fn = jax.jit(lambda p, c, t, l: lm_generate(p, c, t, l, steps, cfg))
+    logits, caches = prefill_fn(packed, caches, prompt)
     first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    tokens, caches = jax.jit(
-        lambda p, c, t, l: lm_generate(p, c, t, l, steps, cfg)
-    )(packed, caches, first, jnp.asarray(plen, jnp.int32))
+    tokens, caches = generate_fn(packed, caches, first, jnp.asarray(plen, jnp.int32))
     tokens = np.asarray(tokens)          # the single host transfer
 
     # spot-check: the packed tree reconstructs to exactly masked dense,

@@ -9,7 +9,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# static-analysis gate first (DESIGN.md §14): ~1.5s, and a tracer-lint
+# regression should fail the run before 3 minutes of tests do
+scripts/lint.sh
+
 python -m pytest -q \
+    tests/test_analysis.py \
     tests/test_knapsack.py \
     tests/test_structures_masks.py \
     tests/test_kernels.py \

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Static-analysis gate (DESIGN.md §14): run the JAX/Pallas-aware tracer
+# lint over src/repro + benchmarks + examples and fail on any finding
+# not in the checked-in analysis_baseline.json.
+#
+#   scripts/lint.sh                  # gate (what check.sh runs)
+#   scripts/lint.sh --json           # machine-readable report
+#   scripts/lint.sh --write-baseline # re-baseline after triage
+#
+# Extra args pass straight through to `python -m repro.analysis`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m repro.analysis --fail-on-new "$@"

@@ -1,0 +1,19 @@
+"""JAX/Pallas-aware static analysis + runtime enforcement (DESIGN.md §14).
+
+Static side: `python -m repro.analysis` lints the repo for host syncs in
+hot paths, PRNG key reuse, recompile hazards, and Pallas structural
+errors (see `repro.analysis.rules`).  Runtime side:
+`repro.analysis.runtime` counts compiles and host-transfer boundaries so
+tests — and `ServingEngine.analysis_stats()` — can prove steady-state
+decode does zero recompiles and one transfer per chunk.
+"""
+from .lint import (  # noqa: F401
+    Finding,
+    HOT_ROOTS,
+    ProjectIndex,
+    ProjectReport,
+    Rule,
+    build_index,
+    run_project,
+    run_rules,
+)

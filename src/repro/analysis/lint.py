@@ -1,0 +1,494 @@
+"""AST-based lint framework for JAX/Pallas hazards (DESIGN.md section 14).
+
+The serving stack's efficiency killers are invisible to Python tooling:
+silent recompiles from unhashable static args, stray host syncs inside
+the decode loop, reused PRNG keys, Pallas index maps that close over
+traced values.  Each was found *by hand* in earlier PRs; this module is
+the tooling that finds them mechanically.
+
+Architecture
+------------
+``ProjectIndex`` parses every ``.py`` file under the scanned roots into
+``ModuleInfo``/``FunctionInfo`` records, builds a base-name call graph,
+and computes the set of functions reachable from the jitted serving hot
+roots (``HOT_ROOTS``).  Rules (see ``repro.analysis.rules``) receive the
+index and yield ``Finding``s.  The framework applies inline suppression
+comments (``# lint: ignore[rule-name]``), compares against a checked-in
+baseline (``analysis_baseline.json``) keyed by *stable* finding keys
+(no line numbers, so unrelated churn never invalidates the baseline),
+and reports new / fixed / baselined counts.
+
+Everything here is stdlib-only (``ast``, ``json``) by design — the
+analyzer must run in any environment the repo runs in.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# Functions whose bodies execute inside (or drive) the jitted serving hot
+# paths.  The host-sync rule treats everything reachable from these as
+# hot.  NOTE for the tensor-parallel PR: reachability is plain base-name
+# call-graph closure today — it must learn to see through `shard_map`
+# wrappers once lm_prefill/_decode_chunk run under one (ROADMAP).
+HOT_ROOTS: Tuple[str, ...] = (
+    "_decode_chunk",
+    "_paged_prefill_step",
+    "lm_prefill",
+    "lm_decode",
+    "lm_generate",
+)
+
+BASELINE_NAME = "analysis_baseline.json"
+
+# `# lint: ignore` suppresses every rule on that line;
+# `# lint: ignore[rule-a, rule-b]` suppresses just those rules.
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*ignore(?:\[([a-z0-9_,\-\s]+)\])?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a concrete source location."""
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    symbol: str  # enclosing function qualname ("<module>" at top level)
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message} [{self.symbol}]"
+
+    def key(self) -> str:
+        """Stable identity: path + symbol + rule + message digest.
+
+        Deliberately excludes line/col so that unrelated edits (moving a
+        function, adding imports) do not invalidate baseline entries.
+        """
+        digest = hashlib.sha1(self.message.encode("utf-8")).hexdigest()[:10]
+        return f"{self.path}::{self.symbol}::{self.rule}::{digest}"
+
+
+@dataclass
+class FunctionInfo:
+    """A def (or async def) with its callees and enclosing module."""
+
+    qualname: str  # e.g. "ServingEngine._admit"
+    name: str  # base name, e.g. "_admit"
+    node: ast.AST
+    module: "ModuleInfo"
+    calls: Set[str] = field(default_factory=set)  # base names of callees
+
+    @property
+    def location(self) -> str:
+        return f"{self.module.path}::{self.qualname}"
+
+
+@dataclass
+class JitInfo:
+    """A binding produced by jax.jit (decorator or assignment)."""
+
+    name: str  # bound name the call sites use
+    static_argnums: Tuple[int, ...]
+    static_argnames: Tuple[str, ...]
+    params: Tuple[str, ...]  # positional params of the wrapped fn ((), if unknown)
+    module: "ModuleInfo"
+    lineno: int
+
+
+@dataclass
+class ModuleInfo:
+    path: str  # repo-relative posix path
+    tree: ast.Module
+    source_lines: List[str]
+    # line -> set of suppressed rule names ("*" = all rules)
+    suppressions: Dict[int, Set[str]] = field(default_factory=dict)
+    functions: List[FunctionInfo] = field(default_factory=list)
+    jits: List[JitInfo] = field(default_factory=list)
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self.suppressions.get(line)
+        return bool(rules) and ("*" in rules or rule in rules)
+
+
+def call_base_name(node: ast.Call) -> Optional[str]:
+    """Base name of a call target: f() -> 'f', a.b.f() -> 'f'."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def dotted_root(node: ast.AST) -> Optional[str]:
+    """Leftmost name of a dotted expression: jnp.ones(...) -> 'jnp'."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Full dotted path of an expression if it is a plain Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """True for `jax.jit` / `jit` expressions."""
+    name = dotted_name(node)
+    return name in ("jax.jit", "jit")
+
+
+def _const_int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, int) for v in val):
+        return tuple(val)
+    return ()
+
+
+def _const_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(val, str):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, str) for v in val):
+        return tuple(val)
+    return ()
+
+
+def _jit_kwargs(call: ast.Call) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    nums: Tuple[int, ...] = ()
+    names: Tuple[str, ...] = ()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            nums = _const_int_tuple(kw.value)
+        elif kw.arg == "static_argnames":
+            names = _const_str_tuple(kw.value)
+    return nums, names
+
+
+def _fn_params(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        return tuple(a.arg for a in node.args.args)
+    return ()
+
+
+class _ModuleScanner(ast.NodeVisitor):
+    """Collects functions, their callees, and jit bindings for one module."""
+
+    def __init__(self, mod: ModuleInfo) -> None:
+        self.mod = mod
+        self._stack: List[str] = []
+
+    # -- functions -------------------------------------------------------
+    def _visit_def(self, node) -> None:
+        self._stack.append(node.name)
+        qualname = ".".join(self._stack)
+        info = FunctionInfo(qualname=qualname, name=node.name, node=node, module=self.mod)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                base = call_base_name(sub)
+                if base:
+                    info.calls.add(base)
+        self.mod.functions.append(info)
+        self._scan_jit_decorators(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    # -- jit bindings ----------------------------------------------------
+    def _scan_jit_decorators(self, node) -> None:
+        for dec in node.decorator_list:
+            if _is_jax_jit(dec):
+                self.mod.jits.append(
+                    JitInfo(node.name, (), (), _fn_params(node), self.mod, node.lineno)
+                )
+            elif isinstance(dec, ast.Call):
+                # @jax.jit(...) or @functools.partial(jax.jit, ...)
+                target = dec
+                if call_base_name(dec) == "partial" and dec.args and _is_jax_jit(dec.args[0]):
+                    target = dec
+                elif not _is_jax_jit(dec.func):
+                    continue
+                nums, names = _jit_kwargs(target)
+                self.mod.jits.append(
+                    JitInfo(node.name, nums, names, _fn_params(node), self.mod, node.lineno)
+                )
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # name = jax.jit(fn_or_lambda, static_argnums=..., static_argnames=...)
+        if isinstance(node.value, ast.Call) and _is_jax_jit(node.value.func):
+            nums, names = _jit_kwargs(node.value)
+            params: Tuple[str, ...] = ()
+            if node.value.args and isinstance(node.value.args[0], ast.Lambda):
+                params = _fn_params(node.value.args[0])
+            elif node.value.args:
+                wrapped = dotted_name(node.value.args[0])
+                if wrapped:
+                    for fi in self.mod.functions:
+                        if fi.name == wrapped.split(".")[-1]:
+                            params = _fn_params(fi.node)
+                            break
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.mod.jits.append(
+                        JitInfo(tgt.id, nums, names, params, self.mod, node.lineno)
+                    )
+        self.generic_visit(node)
+
+
+class ProjectIndex:
+    """Parsed modules + call graph + hot-path reachability for the scan roots."""
+
+    def __init__(self, root: Path, modules: List[ModuleInfo]) -> None:
+        self.root = root
+        self.modules = modules
+        self.defs_by_name: Dict[str, List[FunctionInfo]] = {}
+        self.jits_by_name: Dict[str, JitInfo] = {}
+        for mod in modules:
+            for fi in mod.functions:
+                self.defs_by_name.setdefault(fi.name, []).append(fi)
+            for ji in mod.jits:
+                self.jits_by_name[ji.name] = ji
+        self.hot_functions: Set[str] = self._reach(HOT_ROOTS)
+
+    def _reach(self, roots: Sequence[str]) -> Set[str]:
+        """Base-name call-graph closure from `roots` (callee direction).
+
+        Conservative over-approximation: two unrelated functions sharing
+        a name are merged.  Good enough at repo scale, and errs toward
+        flagging (a suppression is one comment away).
+        """
+        seen: Set[str] = set()
+        frontier: List[str] = list(roots)
+        while frontier:
+            name = frontier.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            for fi in self.defs_by_name.get(name, []):
+                frontier.extend(fi.calls - seen)
+        return seen
+
+    def is_hot(self, fi: FunctionInfo) -> bool:
+        return fi.name in self.hot_functions
+
+    def jit_names(self) -> Set[str]:
+        """Names bound to jitted callables (plus the known hot roots)."""
+        return set(self.jits_by_name) | set(HOT_ROOTS)
+
+
+def _parse_suppressions(lines: List[str]) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        if m.group(1):
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        else:
+            out[i] = {"*"}
+    return out
+
+
+def load_module(path: Path, root: Path) -> Optional[ModuleInfo]:
+    try:
+        source = path.read_text(encoding="utf-8")
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None
+    rel = path.relative_to(root).as_posix() if root in path.parents or path == root else path.as_posix()
+    mod = ModuleInfo(path=rel, tree=tree, source_lines=source.splitlines())
+    mod.suppressions = _parse_suppressions(mod.source_lines)
+    _ModuleScanner(mod).visit(tree)
+    return mod
+
+
+def build_index(root: Path, paths: Sequence[Path]) -> ProjectIndex:
+    modules: List[ModuleInfo] = []
+    seen: Set[Path] = set()
+    for p in paths:
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            f = f.resolve()
+            if f in seen:
+                continue
+            seen.add(f)
+            mod = load_module(f, root)
+            if mod is not None:
+                modules.append(mod)
+    return ProjectIndex(root, modules)
+
+
+# ---------------------------------------------------------------------------
+# Rule protocol + driver
+# ---------------------------------------------------------------------------
+
+class Rule:
+    """Base class: subclasses set `name`/`doc` and implement `check`."""
+
+    name: str = ""
+    doc: str = ""
+
+    def check(self, index: ProjectIndex) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def run_rules(
+    index: ProjectIndex,
+    rules: Sequence[Rule],
+    enabled: Optional[Set[str]] = None,
+) -> Tuple[List[Finding], int]:
+    """Run rules over the index; returns (findings, n_inline_suppressed)."""
+    by_path = {m.path: m for m in index.modules}
+    findings: List[Finding] = []
+    suppressed = 0
+    for rule in rules:
+        if enabled is not None and rule.name not in enabled:
+            continue
+        for f in rule.check(index):
+            mod = by_path.get(f.path)
+            if mod is not None and mod.suppressed(f.line, f.rule):
+                suppressed += 1
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, suppressed
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def unique_keys(findings: Sequence[Finding]) -> List[str]:
+    """Finding keys with '#n' suffixes for same-key repeats (stable order)."""
+    counts: Dict[str, int] = {}
+    keys: List[str] = []
+    for f in findings:
+        k = f.key()
+        n = counts.get(k, 0)
+        counts[k] = n + 1
+        keys.append(k if n == 0 else f"{k}#{n}")
+    return keys
+
+
+def load_baseline(path: Path) -> Dict[str, Dict[str, str]]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    return dict(data.get("entries", {}))
+
+
+def write_baseline(path: Path, findings: Sequence[Finding], notes: Optional[Dict[str, str]] = None) -> None:
+    notes = notes or {}
+    entries = {}
+    for f, k in zip(findings, unique_keys(findings)):
+        entries[k] = {
+            "rule": f.rule,
+            "note": notes.get(k, "TODO: justify or fix"),
+        }
+    payload = {
+        "version": 1,
+        "comment": "Baseline for `python -m repro.analysis` (DESIGN.md section 14). "
+        "Keys are path::symbol::rule::message-digest — line-number free, so "
+        "unrelated churn never invalidates an entry. Every entry carries a "
+        "one-line justification; fix the code instead of adding entries "
+        "whenever possible.",
+        "entries": entries,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=False) + "\n", encoding="utf-8")
+
+
+@dataclass
+class BaselineDiff:
+    new: List[Finding]
+    known: List[Finding]
+    stale: List[str]  # baseline keys with no matching finding
+
+
+def diff_baseline(findings: Sequence[Finding], baseline: Dict[str, Dict[str, str]]) -> BaselineDiff:
+    new: List[Finding] = []
+    known: List[Finding] = []
+    seen_keys: Set[str] = set()
+    for f, k in zip(findings, unique_keys(findings)):
+        seen_keys.add(k)
+        (known if k in baseline else new).append(f)
+    stale = sorted(set(baseline) - seen_keys)
+    return BaselineDiff(new=new, known=known, stale=stale)
+
+
+# ---------------------------------------------------------------------------
+# Project entry point (used by CLI, tests, and bench_serving.py)
+# ---------------------------------------------------------------------------
+
+DEFAULT_SCAN_PATHS = ("src/repro", "benchmarks", "examples")
+
+
+def default_rules() -> List[Rule]:
+    from .rules import all_rules
+
+    return all_rules()
+
+
+@dataclass
+class ProjectReport:
+    findings: List[Finding]
+    diff: BaselineDiff
+    inline_suppressed: int
+    files_scanned: int
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return dict(sorted(out.items()))
+
+
+def run_project(
+    root: Path,
+    paths: Optional[Sequence[str]] = None,
+    baseline_path: Optional[Path] = None,
+    enabled: Optional[Set[str]] = None,
+) -> ProjectReport:
+    root = Path(root).resolve()
+    scan = [root / p for p in (paths or DEFAULT_SCAN_PATHS)]
+    scan = [p for p in scan if p.exists()]
+    index = build_index(root, scan)
+    findings, suppressed = run_rules(index, default_rules(), enabled=enabled)
+    baseline = load_baseline(baseline_path or (root / BASELINE_NAME))
+    diff = diff_baseline(findings, baseline)
+    return ProjectReport(
+        findings=findings,
+        diff=diff,
+        inline_suppressed=suppressed,
+        files_scanned=len(index.modules),
+    )

@@ -1,0 +1,277 @@
+"""host-sync rule: device->host synchronisation in the wrong place.
+
+Two flavors:
+
+* **in-trace** — a sync op (`.item()`, `np.asarray`, `float()/int()/
+  bool()` on a device value, `.block_until_ready()`, `jax.device_get`)
+  inside a function reachable from the jitted hot roots.  Under trace
+  these are at best a silent sync, at worst a `TracerArrayConversion`
+  crash.
+* **driver-loop** — the same ops inside a `for`/`while` loop that also
+  calls a known-jitted function.  Each iteration blocks on the device,
+  serialising the loop (the exact bug class the chunked decode loop was
+  built to kill).
+
+Coercions (`float`/`int`/`bool`, `np.asarray`) are only flagged when the
+argument *derives from a device computation* (assigned from a
+`jax.`/`jnp.` call or a known-jitted call, possibly through unpacking /
+indexing / arithmetic) — `int(cfg.d_model * 4)` is static Python and
+stays silent.  Inside jitted functions, parameters count as
+device-derived except declared static argnames and a small blocklist
+(`self`, `cfg`, `config`, `spec`).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from ..lint import (
+    Finding,
+    FunctionInfo,
+    ProjectIndex,
+    Rule,
+    call_base_name,
+    dotted_name,
+    dotted_root,
+)
+from . import register
+
+_DEVICE_ROOTS = {"jax", "jnp", "lax"}
+_NP_ROOTS = {"np", "numpy", "onp"}
+_NP_CONVERTERS = {"asarray", "array"}
+_COERCIONS = {"float", "int", "bool"}
+_STATIC_PARAM_BLOCKLIST = {"self", "cls", "cfg", "config", "spec"}
+
+
+def _device_vars(fi: FunctionInfo, jit_names: Set[str], params_device: bool, static_names: Set[str]) -> Set[str]:
+    """Names in `fi` bound (transitively) to device-computation results."""
+    dv: Set[str] = set()
+    if params_device:
+        for p in ast.walk(fi.node):
+            if isinstance(p, ast.arguments):
+                for a in list(p.args) + list(p.kwonlyargs):
+                    if a.arg not in static_names and a.arg not in _STATIC_PARAM_BLOCKLIST:
+                        dv.add(a.arg)
+                break
+
+    def is_device(node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in dv
+        if isinstance(node, ast.Call):
+            if dotted_name(node.func) == "jax.device_get":
+                return False  # device_get returns numpy: host-side from here on
+            root = dotted_root(node.func)
+            if root in _DEVICE_ROOTS:
+                return True
+            base = call_base_name(node)
+            if base in jit_names:
+                return True
+            # method call on a device value: x.astype(...), x.sum()
+            if isinstance(node.func, ast.Attribute) and is_device(node.func.value):
+                return True
+            return False
+        if isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return is_device(node.value)
+        if isinstance(node, ast.BinOp):
+            return is_device(node.left) or is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return is_device(node.operand)
+        if isinstance(node, ast.Compare):
+            return is_device(node.left) or any(is_device(c) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(is_device(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return is_device(node.body) or is_device(node.orelse)
+        return False
+
+    def mark(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            dv.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                mark(e)
+        elif isinstance(target, ast.Starred):
+            mark(target.value)
+
+    # two passes for simple forward chains (a = jit_f(); b = a[0]; c = b + 1)
+    for _ in range(2):
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign) and is_device(node.value):
+                for t in node.targets:
+                    mark(t)
+            elif isinstance(node, ast.AugAssign) and (is_device(node.value) or is_device(node.target)):
+                mark(node.target)
+            elif isinstance(node, ast.For) and is_device(node.iter):
+                mark(node.target)
+    return dv
+
+
+class _SyncOp:
+    def __init__(self, node: ast.Call, what: str, needs_device_arg: bool) -> None:
+        self.node = node
+        self.what = what
+        self.needs_device_arg = needs_device_arg
+
+
+def _sync_ops(body: ast.AST) -> List[_SyncOp]:
+    out: List[_SyncOp] = []
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if isinstance(node.func, ast.Attribute):
+            attr = node.func.attr
+            if attr == "item" and not node.args:
+                out.append(_SyncOp(node, "`.item()` blocks on the device", False))
+                continue
+            if attr == "block_until_ready":
+                out.append(_SyncOp(node, "`.block_until_ready()` is an explicit device barrier", False))
+                continue
+        if name == "jax.block_until_ready":
+            out.append(_SyncOp(node, "`jax.block_until_ready` is an explicit device barrier", False))
+            continue
+        if name == "jax.device_get":
+            out.append(_SyncOp(node, "`jax.device_get` pulls device buffers to host", False))
+            continue
+        root = dotted_root(node.func)
+        if (
+            root in _NP_ROOTS
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _NP_CONVERTERS
+            and node.args
+        ):
+            out.append(_SyncOp(node, f"`{root}.{node.func.attr}` on a device value copies to host", True))
+            continue
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in _COERCIONS
+            and len(node.args) == 1
+        ):
+            out.append(_SyncOp(node, f"`{node.func.id}()` on a device value forces a host sync", True))
+    return out
+
+
+def _declared_sync_nodes(fi: FunctionInfo) -> Set[ast.AST]:
+    """AST nodes inside `with ...sync_region(tag):` blocks.
+
+    A pull wrapped in `repro.analysis.runtime.sync_region` is a
+    *declared* blocking boundary — counted at runtime, exempt from the
+    driver-loop flavor (but never from in-trace: a sync region inside a
+    jitted function is still a bug).
+    """
+    out: Set[ast.AST] = set()
+    for node in ast.walk(fi.node):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        for item in node.items:
+            ce = item.context_expr
+            if isinstance(ce, ast.Call) and call_base_name(ce) == "sync_region":
+                for stmt in node.body:
+                    out.update(ast.walk(stmt))
+                break
+    return out
+
+
+def _loops_with_jit_calls(fi: FunctionInfo, jit_names: Set[str]) -> List[ast.AST]:
+    loops = []
+    for node in ast.walk(fi.node):
+        if isinstance(node, (ast.For, ast.While)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and call_base_name(sub) in jit_names:
+                    loops.append(node)
+                    break
+    return loops
+
+
+@register
+class HostSyncRule(Rule):
+    name = "host-sync"
+    doc = (
+        "Device->host sync ops (.item(), np.asarray, float/int/bool "
+        "coercions, block_until_ready, device_get) inside hot-path "
+        "functions or inside driver loops that call jitted functions."
+    )
+
+    def check(self, index: ProjectIndex) -> Iterable[Finding]:
+        jit_names = index.jit_names()
+        static_by_fn: Dict[str, Set[str]] = {
+            ji.name: set(ji.static_argnames)
+            | {ji.params[i] for i in ji.static_argnums if i < len(ji.params)}
+            for ji in index.jits_by_name.values()
+        }
+        for mod in index.modules:
+            for fi in mod.functions:
+                hot = index.is_hot(fi)
+                if hot:
+                    dv = _device_vars(
+                        fi, jit_names, params_device=True,
+                        static_names=static_by_fn.get(fi.name, set()),
+                    )
+                    for op in _sync_ops(fi.node):
+                        if op.needs_device_arg:
+                            # np converters on a tracer crash outright -> always flag in-trace;
+                            # python coercions only when provably device-derived.
+                            is_np = "copies to host" in op.what
+                            arg_dev = any(_arg_is_device(a, dv, jit_names) for a in op.node.args)
+                            if not is_np and not arg_dev:
+                                continue
+                            if is_np and not arg_dev and not _any_name_arg(op.node):
+                                continue
+                        yield Finding(
+                            rule=self.name, path=mod.path,
+                            line=op.node.lineno, col=op.node.col_offset,
+                            symbol=fi.qualname,
+                            message=f"{op.what} in hot-path function `{fi.name}` "
+                            f"(reachable from jitted roots)",
+                        )
+                else:
+                    dv = _device_vars(fi, jit_names, params_device=False, static_names=set())
+                    declared = _declared_sync_nodes(fi)
+                    for loop in _loops_with_jit_calls(fi, jit_names):
+                        for op in _sync_ops(loop):
+                            if op.node in declared:
+                                continue
+                            if op.needs_device_arg and not any(
+                                _arg_is_device(a, dv, jit_names) for a in op.node.args
+                            ):
+                                continue
+                            yield Finding(
+                                rule=self.name, path=mod.path,
+                                line=op.node.lineno, col=op.node.col_offset,
+                                symbol=fi.qualname,
+                                message=f"{op.what} inside a driver loop that calls "
+                                f"jitted functions — one blocking round-trip per iteration",
+                            )
+
+
+def _any_name_arg(call: ast.Call) -> bool:
+    return any(isinstance(a, (ast.Name, ast.Attribute, ast.Subscript)) for a in call.args)
+
+
+def _arg_is_device(arg: ast.AST, dv: Set[str], jit_names: Set[str]) -> bool:
+    if isinstance(arg, ast.Name):
+        return arg.id in dv
+    if isinstance(arg, ast.Call):
+        if dotted_name(arg.func) == "jax.device_get":
+            return False  # numpy result — host-side
+        root = dotted_root(arg.func)
+        if root in _DEVICE_ROOTS:
+            return True
+        if call_base_name(arg) in jit_names:
+            return True
+        if isinstance(arg.func, ast.Attribute):
+            return _arg_is_device(arg.func.value, dv, jit_names)
+        return False
+    if isinstance(arg, (ast.Attribute, ast.Subscript)):
+        return _arg_is_device(arg.value, dv, jit_names)
+    if isinstance(arg, ast.BinOp):
+        return _arg_is_device(arg.left, dv, jit_names) or _arg_is_device(arg.right, dv, jit_names)
+    if isinstance(arg, ast.UnaryOp):
+        return _arg_is_device(arg.operand, dv, jit_names)
+    if isinstance(arg, ast.Compare):
+        return _arg_is_device(arg.left, dv, jit_names) or any(
+            _arg_is_device(c, dv, jit_names) for c in arg.comparators
+        )
+    if isinstance(arg, (ast.Tuple, ast.List)):
+        return any(_arg_is_device(e, dv, jit_names) for e in arg.elts)
+    return False

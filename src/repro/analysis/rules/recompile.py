@@ -1,0 +1,156 @@
+"""recompile-hazard rule: call patterns that defeat the jit cache.
+
+jax.jit caches on (fn identity, static arg *values*, traced arg
+shapes/dtypes).  Three ways user code silently recompiles every call:
+
+* `jax.jit(...)` constructed inside a loop, or immediately invoked
+  (`jax.jit(f)(x)`) — fresh wrapper identity each time;
+* an unhashable literal (list/dict/set) or a fresh `lambda` passed in a
+  static position — either a TypeError or a cache miss per call;
+* a static argument bound to a name that is reassigned inside the
+  enclosing loop — one compile per distinct value, which is a deliberate
+  bucketing strategy at best (suppress with a note) and a compile storm
+  at worst.
+
+Static positions are resolved from the project-wide jit registry
+(decorated defs and `name = jax.jit(...)` bindings with literal
+`static_argnums`/`static_argnames`).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..lint import (
+    Finding,
+    FunctionInfo,
+    JitInfo,
+    ProjectIndex,
+    Rule,
+    call_base_name,
+    dotted_name,
+)
+from . import register
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp, ast.GeneratorExp)
+
+
+def _static_args_at_call(call: ast.Call, ji: JitInfo) -> List[Tuple[str, ast.AST]]:
+    """(static-param-label, value-expr) pairs bound at this call site."""
+    out: List[Tuple[str, ast.AST]] = []
+    static_names = set(ji.static_argnames)
+    for i in ji.static_argnums:
+        if i < len(ji.params):
+            static_names.add(ji.params[i])
+    for i, arg in enumerate(call.args):
+        label = ji.params[i] if i < len(ji.params) else f"arg{i}"
+        if i in ji.static_argnums or label in static_names:
+            out.append((label, arg))
+    for kw in call.keywords:
+        if kw.arg is not None and kw.arg in static_names:
+            out.append((kw.arg, kw.value))
+    return out
+
+
+def _loop_assigned_names(loop: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+
+    def mark(t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            names.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                mark(e)
+        elif isinstance(t, ast.Starred):
+            mark(t.value)
+
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                mark(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            mark(node.target)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            mark(node.target)
+    return names
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and dotted_name(node.func) in ("jax.jit", "jit")
+
+
+@register
+class RecompileHazardRule(Rule):
+    name = "recompile-hazard"
+    doc = (
+        "jit-in-loop / jit-then-call-immediately, unhashable or fresh-"
+        "lambda static args, and static args reassigned per loop "
+        "iteration."
+    )
+
+    def check(self, index: ProjectIndex) -> Iterable[Finding]:
+        for mod in index.modules:
+            for fi in mod.functions:
+                yield from self._check_fn(index, mod, fi)
+
+    def _check_fn(self, index: ProjectIndex, mod, fi: FunctionInfo) -> Iterable[Finding]:
+        loops = [n for n in ast.walk(fi.node) if isinstance(n, (ast.For, ast.While))]
+        loop_nodes = {loop: set(ast.walk(loop)) for loop in loops}
+        loop_assigned = {loop: _loop_assigned_names(loop) for loop in loops}
+
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            # jax.jit(f)(x): fresh wrapper per call -> compile per call
+            if _is_jit_expr(node.func):
+                yield Finding(
+                    rule=self.name, path=mod.path, line=node.lineno, col=node.col_offset,
+                    symbol=fi.qualname,
+                    message="`jax.jit(...)` invoked immediately — a fresh wrapper (and "
+                    "compile) per call; bind the jitted function once instead",
+                )
+                continue
+            # jax.jit constructed inside a loop
+            if _is_jit_expr(node):
+                for loop, members in loop_nodes.items():
+                    if node in members:
+                        yield Finding(
+                            rule=self.name, path=mod.path, line=node.lineno, col=node.col_offset,
+                            symbol=fi.qualname,
+                            message="`jax.jit` constructed inside a loop — new wrapper "
+                            "identity every iteration defeats the compile cache",
+                        )
+                        break
+                continue
+            # static-arg hazards at call sites of known jitted functions
+            base = call_base_name(node)
+            ji = index.jits_by_name.get(base) if base else None
+            if ji is None:
+                continue
+            for label, value in _static_args_at_call(node, ji):
+                if isinstance(value, _UNHASHABLE):
+                    yield Finding(
+                        rule=self.name, path=mod.path, line=value.lineno, col=value.col_offset,
+                        symbol=fi.qualname,
+                        message=f"unhashable literal passed to static arg `{label}` of "
+                        f"jitted `{base}` — TypeError or cache miss per call",
+                    )
+                elif isinstance(value, ast.Lambda):
+                    yield Finding(
+                        rule=self.name, path=mod.path, line=value.lineno, col=value.col_offset,
+                        symbol=fi.qualname,
+                        message=f"fresh lambda passed to static arg `{label}` of jitted "
+                        f"`{base}` — new identity per call forces a recompile",
+                    )
+                elif isinstance(value, ast.Name):
+                    for loop, members in loop_nodes.items():
+                        if node in members and value.id in loop_assigned[loop]:
+                            yield Finding(
+                                rule=self.name, path=mod.path,
+                                line=value.lineno, col=value.col_offset,
+                                symbol=fi.qualname,
+                                message=f"static arg `{label}` of jitted `{base}` is bound to "
+                                f"`{value.id}`, reassigned inside the enclosing loop — one "
+                                f"compile per distinct value",
+                            )
+                            break

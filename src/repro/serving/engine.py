@@ -89,6 +89,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import runtime as analysis_runtime
 from repro.configs.base import ModelConfig
 from repro.models import init_caches, layer_specs, lm_decode, lm_prefill
 from repro.models.transformer import _select_token_rows
@@ -371,6 +372,10 @@ class ServingEngine:
         self._next_rid = 0
         self.active_slot_ticks = 0
         self.decode_ticks = 0
+        # declared host round-trips (analysis_stats / DESIGN.md §14):
+        # one "decode_chunk" region per chunk, one "admission" region
+        # per admitted request — everything else stays on device
+        self.sync_regions: Dict[str, int] = {"admission": 0, "decode_chunk": 0}
 
     # -- request intake ----------------------------------------------------
 
@@ -506,7 +511,15 @@ class ServingEngine:
                 self.caches, jnp.asarray(self._tables[slot][None]),
                 jnp.asarray(slot, jnp.int32), cfg=self.cfg, start=start,
                 guard=self.nan_guard)
-            if self.nan_guard and not bool(ok):
+            # ONE declared host round-trip per admission: first token,
+            # guard verdict, and the request's decode key in a single
+            # batched pull (was three separate syncs)
+            with analysis_runtime.sync_region("admission"):
+                self.sync_regions["admission"] += 1
+                first_np, ok_np, rng_np = jax.device_get(
+                    (first, ok,
+                     jax.random.fold_in(self._base_key, req.rid)))
+            if self.nan_guard and not bool(ok_np):
                 # poisoned prefill: quarantine before the request ever
                 # holds a slot — its pages (and any cached blocks that
                 # fed them) must never be mapped again
@@ -523,7 +536,7 @@ class ServingEngine:
                 free.insert(0, slot)
                 continue
             self._cache_len[slot] = req.prompt_len
-            tok = int(first[0])
+            tok = int(first_np[0])
             req.first_token_time = time.perf_counter()
             req.prefix_hit_pages = n_hit
             if self.prefix_index is not None:
@@ -532,8 +545,7 @@ class ServingEngine:
                     self.prefix_hit_requests += 1
                 self.prefix_pages_shared += n_hit
             self._tok[slot, 0] = tok
-            self._rngs[slot] = np.asarray(
-                jax.random.fold_in(self._base_key, req.rid), np.uint32)
+            self._rngs[slot] = np.asarray(rng_np, np.uint32)
             t, k, p = self.sampling_for(req)
             self._temp[slot] = t
             self._topk[slot] = k if k is not None else 0
@@ -752,8 +764,12 @@ class ServingEngine:
             return admitted
         self._consec_chunk_failures = 0
         self.caches = caches
-        toks, counts = np.asarray(toks), np.asarray(counts)
-        bad = np.asarray(bad)
+        # ONE declared host round-trip per decode chunk: every per-slot
+        # output in a single batched pull (device_get returns numpy)
+        with analysis_runtime.sync_region("decode_chunk"):
+            self.sync_regions["decode_chunk"] += 1
+            toks, counts, bad, tok, clen, rngs = jax.device_get(
+                (toks, counts, bad, tok, clen, rngs))
         self._tok = np.array(tok)
         self._cache_len = np.array(clen)
         self._rngs = np.array(rngs)
@@ -812,6 +828,25 @@ class ServingEngine:
             "alloc_failures": self.alloc_failures,
             "index_drops": self.index_drops,
             "degraded": int(self.degraded),
+        }
+
+    def analysis_stats(self) -> Dict[str, object]:
+        """Runtime counters backing the static analyzer's dynamic claims
+        (DESIGN.md §14), exposed like :attr:`prefix_stats` /
+        :attr:`fault_stats`: jit cache sizes for the two hot-path entry
+        points (steady state must not grow them), the process-wide
+        compile-event count, and this engine's declared host sync
+        regions — one ``decode_chunk`` region per chunk, one
+        ``admission`` region per admitted request.  Tests snapshot this
+        before and after traffic to prove "0 recompiles, <=1 transfer
+        per chunk"."""
+        return {
+            "compile_caches": {
+                "_decode_chunk": analysis_runtime.cache_size(_decode_chunk),
+                "_paged_prefill_step": analysis_runtime.cache_size(_paged_prefill_step),
+            },
+            "compile_events": analysis_runtime.compile_events(),
+            "sync_regions": dict(self.sync_regions),
         }
 
     def release_prefix_cache(self) -> int:

@@ -585,3 +585,69 @@ def test_engine_chunked_eos_freezes_midchunk_and_readmits():
     np.testing.assert_array_equal(done[1].tokens,
                                   _solo(cfg, dense, p1, 3, eos_id=eos))
     assert done[1].admitted_at >= done[0].finished_at
+
+
+# ---------------------------------------------------------------------------
+# Steady-state invariants (DESIGN.md §14): 0 recompiles, 1 transfer/chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dense", "packed"])
+def test_engine_steady_state_zero_recompiles_one_sync_per_chunk(kind):
+    """After warm-up, N chunks of mixed admit/retire traffic must hit the
+    jit cache every time (0 new compiles, engine-wide compile-event
+    tripwire included) and perform exactly ONE declared host round-trip
+    per decode chunk plus one per admission — proven with the
+    analysis/runtime.py counters, and with stray-pull interception armed
+    so any undeclared device->host pull raises."""
+    from repro.analysis import runtime as analysis_runtime
+
+    cfg, dense_p, packed_p = _smoke_pair()
+    params = dense_p if kind == "dense" else packed_p
+    rng = np.random.default_rng(7)
+    PLEN, GEN = 6, 3                   # one shape bucket for every request
+
+    def build():
+        # prefix caching off so every admission prefills from start=0 —
+        # a single static-start bucket for _paged_prefill_step
+        return ServingEngine(params, cfg, num_slots=2, page_size=4,
+                             max_seq_len=16, ticks_per_sync=2,
+                             prefix_caching=False)
+
+    def traffic(eng, n, spread):
+        for i in range(n):
+            eng.submit(rng.integers(0, cfg.vocab, size=PLEN).astype(np.int32),
+                       GEN, arrival=i * spread)
+
+    # warm-up: compile every (shape, static) combo the steady engine uses
+    warm = build()
+    traffic(warm, 3, spread=2)
+    assert len(warm.run()) == 3
+
+    eng = build()
+    traffic(eng, 6, spread=2)          # staggered: retire/admit churn
+    before = eng.analysis_stats()
+    chunks = 0
+    with analysis_runtime.no_host_sync(strict=True):
+        while eng.scheduler.pending or any(s is not None for s in eng.slots):
+            regions0 = dict(eng.sync_regions)
+            admitted = eng.step()
+            active = any(s is not None for s in eng.slots)
+            d_chunk = eng.sync_regions["decode_chunk"] - regions0["decode_chunk"]
+            d_admit = eng.sync_regions["admission"] - regions0["admission"]
+            assert d_chunk <= 1, "more than one transfer boundary in a chunk"
+            assert d_admit == admitted, "admission sync without an admission"
+            chunks += d_chunk
+            if not active and not eng.scheduler.pending and d_chunk == 0:
+                break
+    after = eng.analysis_stats()
+
+    assert chunks >= 3                 # the loop really decoded in chunks
+    assert after["compile_caches"] == before["compile_caches"], \
+        "steady-state traffic recompiled a hot-path function"
+    assert after["compile_events"] == before["compile_events"], \
+        "something compiled during steady-state traffic"
+    assert after["sync_regions"]["decode_chunk"] - \
+        before["sync_regions"]["decode_chunk"] == chunks
+    assert after["sync_regions"]["admission"] - \
+        before["sync_regions"]["admission"] == 6
+    assert all(r.status.name == "FINISHED" for r in eng.requests.values())
