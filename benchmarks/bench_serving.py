@@ -9,6 +9,7 @@ Times the two jitted serving calls (DESIGN.md §7/§8) — batched
      "dense_prefill_ms": ..., "packed_prefill_ms": ...,
      "prefill_speedup": ..., "decode_speedup": ...,
      "continuous_batching": {...}, "prefix_caching": {...},
+     "fault_tolerance": {...}, "slo_scheduling": {...},
      "paged_attention": {...}}
 
 The ``continuous_batching`` section streams ragged requests through the
@@ -188,6 +189,107 @@ def _bench_prefix_caching(
         "page_size": page_size, "gen": gen,
         "burst": section("burst", np.random.default_rng(11)),
         "poisson": section("poisson", np.random.default_rng(13)),
+    }
+
+
+def _bench_slo_scheduling(
+    params, cfg, *, requests: int = 12, slots: int = 4, prompt_len: int = 12,
+    gen: int = 32, page_size: int = 8, fixed_tps: int = 16,
+    levels=(1, 2, 4, 8, 16), reps: int = 3,
+) -> Dict[str, Any]:
+    """Adaptive chunking vs fixed ``ticks_per_sync`` on the SAME
+    prioritized workload (DESIGN.md §15): ragged generation lengths over
+    burst and poisson arrivals, alternating priority classes (0 =
+    interactive with a soft TTFT target, 1 = batch).  Both engines run
+    the identical submit sequence — priorities, targets, arrivals — so
+    the only variable is the chunk-length policy: fixed boundaries land
+    on the ``fixed_tps`` grid (a freed slot idles until the next
+    multiple), adaptive ones descend the level ladder to land exactly
+    on slot-free events and SLO edges, then grow back.
+
+    Reports TTFT p50/p99 both in *ticks* (deterministic — the gate
+    check.sh uses) and wall-clock ms, by priority class, plus streamed
+    throughput (median of ``reps``).  check.sh gates: adaptive p99 TTFT
+    beats fixed on the burst workload AND throughput stays within 10%."""
+    import numpy as np
+
+    from repro.serving import AdaptiveChunkPolicy, ServingEngine
+    from repro.serving.slo import percentiles
+
+    rng = np.random.default_rng(17)
+    lens = rng.integers(max(1, prompt_len // 2), prompt_len + 1,
+                        size=requests)
+    gens = rng.integers(max(2, gen // 2), gen + 1, size=requests)
+    prompts = [rng.integers(0, cfg.vocab, size=int(l)).astype(np.int32)
+               for l in lens]
+    prios = [i % 2 for i in range(requests)]
+
+    def run_once(arrivals, adaptive: bool):
+        eng = ServingEngine(
+            params, cfg, num_slots=slots, page_size=page_size,
+            max_seq_len=prompt_len + gen, ticks_per_sync=fixed_tps,
+            chunk_policy=(AdaptiveChunkPolicy(levels=tuple(levels))
+                          if adaptive else None))
+        for i, pr in enumerate(prompts):
+            eng.submit(pr, int(gens[i]), arrival=arrivals[i],
+                       priority=prios[i],
+                       ttft_target_ticks=(2 * fixed_tps if prios[i] == 0
+                                          else None))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = max(time.perf_counter() - t0, 1e-9)
+        reqs = [done[rid] for rid in sorted(done)]
+        return {
+            "tok_s": sum(len(r.tokens) for r in reqs) / dt,
+            "ttft_ms": [(r.first_token_time - t0) * 1e3 for r in reqs],
+            "ttft_ticks": [float(r.ttft_ticks) for r in reqs],
+            "slo": eng.slo_stats(),
+        }
+
+    def side(arrivals, adaptive: bool) -> Dict[str, Any]:
+        runs = [run_once(arrivals, adaptive) for _ in range(reps)]
+        tick_pct = percentiles(runs[0]["ttft_ticks"])   # deterministic
+        ms_p99 = float(np.median(
+            [percentiles(r["ttft_ms"])["p99"] for r in runs]))
+        ms_p50 = float(np.median(
+            [percentiles(r["ttft_ms"])["p50"] for r in runs]))
+        slo = runs[0]["slo"]
+        return {
+            "tok_s": float(np.median([r["tok_s"] for r in runs])),
+            "ttft_ticks_p50": tick_pct["p50"],
+            "ttft_ticks_p99": tick_pct["p99"],
+            "ttft_ms_p50": ms_p50,
+            "ttft_ms_p99": ms_p99,
+            "by_priority": slo["by_priority"],
+            "ttft_target_misses": slo["ttft_target_misses"],
+            "chunks_by_ticks": slo["chunks_by_ticks"],
+            "chunk_shrinks": slo["chunk_shrinks"],
+            "chunk_grows": slo["chunk_grows"],
+        }
+
+    def section(kind: str, seed: int) -> Dict[str, Any]:
+        arrivals = _gen_arrivals(np.random.default_rng(seed), requests, kind)
+        run_once(arrivals, False)       # warm every chunk-level jit shape
+        run_once(arrivals, True)
+        fixed = side(arrivals, False)
+        adapt = side(arrivals, True)
+        return {
+            "arrival": kind, "arrivals": arrivals,
+            "fixed": fixed, "adaptive": adapt,
+            "ttft_ticks_p99_improvement":
+                fixed["ttft_ticks_p99"] / max(adapt["ttft_ticks_p99"], 1e-9),
+            "ttft_ms_p99_improvement":
+                fixed["ttft_ms_p99"] / max(adapt["ttft_ms_p99"], 1e-9),
+            "throughput_ratio": adapt["tok_s"] / max(fixed["tok_s"], 1e-9),
+        }
+
+    return {
+        "requests": requests, "slots": slots, "prompt_len": prompt_len,
+        "gen": gen, "fixed_ticks_per_sync": fixed_tps,
+        "levels": list(levels), "reps": reps,
+        "priorities": prios,
+        "burst": section("burst", 19),
+        "poisson": section("poisson", 23),
     }
 
 
@@ -382,10 +484,17 @@ def bench_serving(
         ft = _bench_fault_tolerance(packed, cfg, batch=batch,
                                     prompt_len=prompt_len, gen=gen,
                                     reps=max(reps, 3))
+        # adaptive chunking vs fixed tps=16 on a prioritized burst /
+        # poisson workload (DESIGN.md §15).  check.sh gates: adaptive
+        # p99 TTFT beats fixed on burst, throughput within 10%.
+        slo = _bench_slo_scheduling(packed, cfg, slots=batch,
+                                    prompt_len=prompt_len, gen=gen,
+                                    reps=max(reps, 3))
     else:
         cb = {"unsupported": "SWA window / encoder-decoder arch"}
         pc = {"unsupported": "SWA window / encoder-decoder arch"}
         ft = {"unsupported": "SWA window / encoder-decoder arch"}
+        slo = {"unsupported": "SWA window / encoder-decoder arch"}
     # fused page-walk vs legacy gather decode attention over long contexts
     # (independent of the smoke model above — fixed attention shapes, one
     # table sized for the longest context).  check.sh gates fused >= gather
@@ -410,6 +519,7 @@ def bench_serving(
         "continuous_batching": cb,
         "prefix_caching": pc,
         "fault_tolerance": ft,
+        "slo_scheduling": slo,
         "paged_attention": paged,
     }
 
@@ -482,6 +592,15 @@ def main(quick: bool = False):
             f"guard_on={ft['guard_on_tok_s']:.0f}tok/s "
             f"guard_off={ft['guard_off_tok_s']:.0f}tok/s "
             f"overhead={ft['overhead_pct']:.1f}%")
+    slo = r["slo_scheduling"]
+    if "burst" in slo:
+        b = slo["burst"]
+        lines.append(
+            f"serving_slo_adaptive,{b['adaptive']['tok_s']:.0f},"
+            f"burst p99 TTFT adaptive={b['adaptive']['ttft_ticks_p99']:.0f} "
+            f"fixed16={b['fixed']['ttft_ticks_p99']:.0f} ticks "
+            f"({b['ttft_ticks_p99_improvement']:.2f}x) "
+            f"thpt_ratio={b['throughput_ratio']:.2f}")
     pa = r["paged_attention"]
     longest = str(pa["max_len"])
     row = pa["by_context"][longest]
@@ -560,6 +679,17 @@ def cli() -> int:
         print(f"  fault guard: on {ft['guard_on_tok_s']:8.1f} tok/s  "
               f"off {ft['guard_off_tok_s']:8.1f} tok/s  "
               f"overhead {ft['overhead_pct']:+.1f}%")
+    slo = result["slo_scheduling"]
+    if "burst" in slo:
+        for kind in ("burst", "poisson"):
+            s = slo[kind]
+            print(f"  slo[{kind:>7}]: TTFT p99 adaptive "
+                  f"{s['adaptive']['ttft_ticks_p99']:6.1f} ticks  fixed"
+                  f"{slo['fixed_ticks_per_sync']} "
+                  f"{s['fixed']['ttft_ticks_p99']:6.1f} ticks "
+                  f"({s['ttft_ticks_p99_improvement']:.2f}x)  thpt ratio "
+                  f"{s['throughput_ratio']:.2f}  shrinks "
+                  f"{s['adaptive']['chunk_shrinks']}")
     pa = result["paged_attention"]
     for ctx, row in sorted(pa["by_context"].items(), key=lambda kv: int(kv[0])):
         print(f"  paged[ctx={ctx:>5}]: gather {row['gather_ms']:7.2f}ms  "

@@ -23,6 +23,7 @@ python -m pytest -q \
     tests/test_serve_equiv.py \
     tests/test_serving_engine.py \
     tests/test_serving_faults.py \
+    tests/test_slo_scheduling.py \
     tests/test_page_pool_props.py \
     tests/test_models.py \
     tests/test_pruner.py \
@@ -86,6 +87,15 @@ python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --chaos \
     --pruned 0.75 --prompt-len 12 --gen 16 --requests 4 --batch 3 \
     --arrive-every 2 --ticks-per-sync 4 --page-size 8
 
+# SLO-aware adaptive chunking (DESIGN.md §15): a same-tick burst of 8
+# requests over 4 slots under the adaptive policy — the command exits
+# nonzero unless every stream stays bit-identical to solo decode, at
+# least one chunk-shrink event fired (the policy actually adapted), and
+# every committed chunk length came from the declared compile set
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --stream \
+    --adaptive --pruned 0.75 --prompt-len 12 --gen 8 --requests 8 \
+    --batch 4 --arrive-every 0 --ticks-per-sync 16
+
 # serving benchmark: dense vs packed {prefill, decode} -> BENCH_serving.json
 # (full default size on purpose — ~10s on CPU, and the committed numbers
 # should show the real packed-over-dense margin, which --quick thins out)
@@ -140,11 +150,28 @@ ov = ft["overhead_pct"]
 assert ov < 5.0, \
     f"fault-guard overhead regressed: {ov:.1f}% >= 5% " \
     f"({ft['guard_on_tok_s']:.0f} vs {ft['guard_off_tok_s']:.0f} tok/s)"
+# SLO-aware adaptive chunking (DESIGN.md §15): under the burst arrival
+# pattern the adaptive policy must beat fixed ticks_per_sync=16 on p99
+# TTFT (deterministic tick-space metric — boundaries land at slot-free
+# events instead of the 16-tick grid) while keeping aggregate streamed
+# throughput within 10% (wall clock, median of reps)
+slo = r["slo_scheduling"]["burst"]
+impr = slo["ttft_ticks_p99_improvement"]
+ratio = slo["throughput_ratio"]
+assert impr > 1.0, \
+    f"adaptive p99 TTFT lost to fixed tps=16 on burst: " \
+    f"{slo['adaptive']['ttft_ticks_p99']:.1f} vs " \
+    f"{slo['fixed']['ttft_ticks_p99']:.1f} ticks ({impr:.2f}x)"
+assert ratio >= 0.9, \
+    f"adaptive throughput fell >10% behind fixed tps=16: " \
+    f"{slo['adaptive']['tok_s']:.0f} vs {slo['fixed']['tok_s']:.0f} " \
+    f"tok/s (ratio {ratio:.2f})"
 print(f"bench gate: decode {ds:.2f}x, prefill {r['prefill_speedup']:.2f}x, "
       f"chunked stream {tick4 / tick1:.2f}x over single-tick, "
       f"fused paged decode {sp:.2f}x over gather at ctx {pa['max_len']}, "
       f"prefix-cache hit TTFT {hit:.2f}x, "
-      f"fault-guard overhead {ov:+.1f}% OK")
+      f"fault-guard overhead {ov:+.1f}%, "
+      f"adaptive burst p99 TTFT {impr:.2f}x at {ratio:.2f}x throughput OK")
 PY
 
 echo "check.sh: OK"

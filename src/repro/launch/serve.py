@@ -72,6 +72,18 @@ def main() -> int:
                     help="[--stream] decode steps batched into one "
                          "on-device chunk between scheduler events "
                          "(1 = host sync per token)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="[--stream] SLO-aware adaptive chunking "
+                         "(DESIGN.md §15): the chunk length becomes a "
+                         "policy pick from a geometric level ladder "
+                         "topped at --ticks-per-sync — shrinking toward "
+                         "slot-free events and SLO edges when the queue "
+                         "is hot, growing back when calm.  Requests get "
+                         "alternating priority classes with soft TTFT "
+                         "targets on the interactive class; the run "
+                         "fails unless at least one chunk-shrink event "
+                         "fired and every stream still verifies "
+                         "bit-identical to its solo decode")
     ap.add_argument("--request-temperatures", type=str, default=None,
                     metavar="T0,T1,...",
                     help="[--stream] per-request sampling temperatures, "
@@ -213,7 +225,7 @@ def _run_stream(args, cfg, params) -> int:
     import numpy as np
 
     from repro.models import init_caches, lm_generate, lm_prefill
-    from repro.serving import ServingEngine
+    from repro.serving import AdaptiveChunkPolicy, ServingEngine
 
     plen, gen = max(args.prompt_len, 1), args.gen
     rng = np.random.default_rng(args.seed)
@@ -238,16 +250,31 @@ def _run_stream(args, cfg, params) -> int:
     if args.request_temperatures:
         req_temps = [float(t) for t in args.request_temperatures.split(",")]
 
+    # adaptive mode: geometric chunk-level ladder topped at the fixed
+    # setting, alternating priority classes, soft TTFT targets on the
+    # interactive (priority 0) class — the smoke must see a shrink
+    policy = None
+    if args.adaptive:
+        levels = sorted({1, args.ticks_per_sync}
+                        | {2 ** k for k in range(10)
+                           if 2 ** k < args.ticks_per_sync})
+        policy = AdaptiveChunkPolicy(levels=tuple(levels))
+
     def build():
         eng = ServingEngine(
             params, cfg, num_slots=args.batch, page_size=args.page_size,
             max_seq_len=plen + gen, ticks_per_sync=args.ticks_per_sync,
-            temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, eos_id=args.eos_id, seed=args.seed)
+            chunk_policy=policy, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, eos_id=args.eos_id,
+            seed=args.seed)
         for i, p in enumerate(prompts):
             kw = {}
             if req_temps is not None:
                 kw["temperature"] = req_temps[i % len(req_temps)]
+            if args.adaptive:
+                kw["priority"] = i % 2
+                if i % 2 == 0:
+                    kw["ttft_target_ticks"] = 2 * args.ticks_per_sync
             eng.submit(p, gen, arrival=i * args.arrive_every, **kw)
         return eng
 
@@ -277,6 +304,21 @@ def _run_stream(args, cfg, params) -> int:
               f"of prefilled, {st['blocks_indexed']} blocks resident, "
               f"{st['cow_copies']} COW copies, refcount high-water "
               f"{st['ref_high_water']}")
+    if args.adaptive:
+        slo = engine.slo_stats()
+        print(f"  slo: chunks_by_ticks={slo['chunks_by_ticks']} "
+              f"shrinks={slo['chunk_shrinks']} grows={slo['chunk_grows']} "
+              f"ttft_misses={slo['ttft_target_misses']} "
+              f"by_priority={slo['by_priority']}")
+        if slo["chunk_shrinks"] < 1:
+            print("stream verify FAILED: adaptive run never shrank a "
+                  "chunk (policy inert)")
+            return 1
+        extra = set(slo["chunks_by_ticks"]) - set(slo["chunk_levels"])
+        if extra:
+            print(f"stream verify FAILED: undeclared chunk lengths "
+                  f"{sorted(extra)} ran (compile set violated)")
+            return 1
     if args.shared_prefix:
         # dedupe safety: N identical full prompts must still be distinct
         # requests — unique rids, and (for sampled runs) independent

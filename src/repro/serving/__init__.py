@@ -20,6 +20,15 @@ poisoned rows without touching their co-batched neighbours, prefix-index
 self-verification, crash-consistent chunk stepping with degraded-mode
 fallback, and a seeded fault-injection harness (``repro.serving.faults``)
 to drive all of it deterministically.
+
+DESIGN.md §15 makes the engine SLO-aware: requests carry priority
+classes and soft TTFT/TPOT targets, the scheduler ages waiters so no
+class starves, and an ``AdaptiveChunkPolicy`` turns ``ticks_per_sync``
+into a per-boundary decision over a declared compile set of chunk
+lengths — shrink when the queue is hot or a target is close, grow back
+when calm — with ``engine.slo_stats()`` reporting per-class latency
+distributions.  Token streams stay bit-identical to solo decode under
+every policy.
 """
 from .engine import ServingEngine
 from .faults import (Fault, FaultInjector, InjectedFault, alloc_failure,
@@ -27,8 +36,10 @@ from .faults import (Fault, FaultInjector, InjectedFault, alloc_failure,
 from .pages import NULL_PAGE, PagePool, PrefixIndex
 from .scheduler import (Request, RequestStatus, Scheduler,
                         TERMINAL_STATUSES)
+from .slo import DEFAULT_LEVELS, AdaptiveChunkPolicy, ChunkSignals
 
 __all__ = ["ServingEngine", "PagePool", "PrefixIndex", "NULL_PAGE",
            "Request", "RequestStatus", "Scheduler", "TERMINAL_STATUSES",
            "Fault", "FaultInjector", "InjectedFault", "nan_logit",
-           "alloc_failure", "index_corruption", "chunk_exception"]
+           "alloc_failure", "index_corruption", "chunk_exception",
+           "AdaptiveChunkPolicy", "ChunkSignals", "DEFAULT_LEVELS"]

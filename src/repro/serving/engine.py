@@ -96,6 +96,7 @@ from repro.models.transformer import _select_token_rows
 
 from .pages import NULL_PAGE, PagePool, PrefixIndex
 from .scheduler import Request, RequestStatus, Scheduler
+from .slo import AdaptiveChunkPolicy, ChunkSignals, percentiles
 
 __all__ = ["ServingEngine"]
 
@@ -253,6 +254,20 @@ class ServingEngine:
         between scheduler events.  1 reproduces the PR-4 tick-per-sync
         loop; larger chunks amortize the host round-trip at the cost of
         admissions/retirements only happening at chunk boundaries.
+    chunk_policy : optional :class:`~repro.serving.slo.AdaptiveChunkPolicy`
+        making the chunk length adaptive (DESIGN.md §15): each boundary
+        picks the next length from the policy's declared level ladder —
+        shrinking toward the next slot-free event when arrived waiters
+        exist, shrinking under SLO pressure (close hard deadlines, soft
+        ttft/tpot targets), growing back to the top level when calm.
+        Signals come from host mirrors only (no extra syncs), the
+        policy never changes *what* tokens a stream emits (bit-identity
+        holds under every policy), and only ``policy.compile_levels``
+        chunk variants ever compile.  When set, ``ticks_per_sync``
+        serves only as the degraded-fallback baseline.
+    aging_ticks : scheduler anti-starvation knob — queue wait promotes
+        a request one priority level per this many ticks (None
+        disables aging).  See :class:`~repro.serving.scheduler.Scheduler`.
     temperature / top_k / top_p : engine-wide sampling defaults; each
         request may override them at :meth:`submit`.
     prefix_caching : share page-aligned prompt-prefix KV across requests
@@ -285,6 +300,8 @@ class ServingEngine:
         max_seq_len: int = 64,
         num_pages: Optional[int] = None,
         ticks_per_sync: int = 1,
+        chunk_policy: Optional[AdaptiveChunkPolicy] = None,
+        aging_ticks: Optional[int] = 32,
         temperature: float = 0.0,
         top_k: Optional[int] = None,
         top_p: Optional[float] = None,
@@ -306,6 +323,7 @@ class ServingEngine:
         self.num_slots = num_slots
         self.ticks_per_sync = ticks_per_sync
         self.configured_ticks_per_sync = ticks_per_sync
+        self.chunk_policy = chunk_policy
         self.max_pages = -(-max_seq_len // page_size)
         if num_pages is None:
             num_pages = num_slots * self.max_pages + 1
@@ -316,7 +334,8 @@ class ServingEngine:
         self.prefix_index = (PrefixIndex(self.pool)
                              if self.prefix_caching else None)
         self.scheduler = Scheduler(self.pool, self.prefix_index,
-                                   max_queue=max_queue)
+                                   max_queue=max_queue,
+                                   aging_ticks=aging_ticks)
         self.temperature, self.top_k, self.top_p = temperature, top_k, top_p
         self.eos_id = eos_id
         self.nan_guard = bool(nan_guard)
@@ -338,6 +357,11 @@ class ServingEngine:
         self.index_drops = 0          # verify() inconsistencies -> cache drop
         self.queue_high_water = 0     # deepest the waiting queue ever got
         self.degraded = False         # fell back to single-tick chunks
+        # SLO / adaptive-chunking observability (see slo_stats)
+        self.chunks_by_ticks: Dict[int, int] = {}  # committed chunk lengths
+        self.chunk_shrinks = 0        # committed chunk shorter than previous
+        self.chunk_grows = 0          # committed chunk longer than previous
+        self._last_chunk_ticks: Optional[int] = None
         self.last_chunk_error: Optional[str] = None
         self._consec_chunk_failures = 0
         self._cancel_pending: Set[int] = set()
@@ -383,13 +407,23 @@ class ServingEngine:
                temperature: Optional[float] = None,
                top_k: Optional[int] = None,
                top_p: Optional[float] = None,
-               deadline_ticks: Optional[int] = None) -> int:
+               deadline_ticks: Optional[int] = None,
+               priority: int = 0,
+               ttft_target_ticks: Optional[int] = None,
+               tpot_target_ticks: Optional[int] = None) -> int:
         """Queue a request and return its rid.  Per-request sampling
         params default to the engine-level settings; pass e.g.
         ``temperature=0.0`` to force a greedy stream inside a sampled
         engine (or vice versa).  ``deadline_ticks`` bounds the request's
         lifetime: unfinished by ``arrival + deadline_ticks`` engine
         ticks, it is EXPIRED (waiting or mid-stream).
+
+        ``priority`` (lower = more urgent, default 0) orders admission
+        through the scheduler's aging rule; ``ttft_target_ticks`` /
+        ``tpot_target_ticks`` are *soft* SLO targets — the adaptive
+        chunk policy steers boundaries to land inside them and
+        :meth:`slo_stats` counts the misses, but missing one never
+        terminates the request (use ``deadline_ticks`` for that).
 
         If the bounded waiting queue is full the request is REJECTED —
         terminal immediately, visible via ``engine.requests[rid].status``
@@ -407,10 +441,16 @@ class ServingEngine:
                 f"silently gather garbage embedding rows")
         if deadline_ticks is not None and deadline_ticks < 1:
             raise ValueError("deadline_ticks must be >= 1 (or None)")
+        if ttft_target_ticks is not None and ttft_target_ticks < 1:
+            raise ValueError("ttft_target_ticks must be >= 1 (or None)")
+        if tpot_target_ticks is not None and tpot_target_ticks < 1:
+            raise ValueError("tpot_target_ticks must be >= 1 (or None)")
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
                       arrival=arrival, temperature=temperature,
                       top_k=top_k, top_p=top_p,
-                      deadline_ticks=deadline_ticks)
+                      deadline_ticks=deadline_ticks, priority=priority,
+                      ttft_target_ticks=ttft_target_ticks,
+                      tpot_target_ticks=tpot_target_ticks)
         if self.pool.pages_for(req.budget_tokens) > self.max_pages:
             raise ValueError(
                 f"request needs {req.budget_tokens} tokens > "
@@ -557,7 +597,7 @@ class ServingEngine:
             self._maybe_finish(slot)
         return count
 
-    def _cow_guard(self, active: List[int]) -> None:
+    def _cow_guard(self, active: List[int], ticks: int) -> None:
         """Enforce copy-on-write before a decode chunk: no row may write
         into a page it does not exclusively own.  The standard admission
         path makes this unreachable (decode always writes into a private
@@ -568,7 +608,7 @@ class ServingEngine:
         for i in active:
             s = self.slots[i]
             lo = int(self._cache_len[i])
-            hi = lo + self.ticks_per_sync  # write positions this chunk
+            hi = lo + ticks                # write positions this chunk
             for idx in range(lo // ps, (hi - 1) // ps + 1):
                 if idx >= self.max_pages:
                     break
@@ -604,6 +644,7 @@ class ServingEngine:
         quarantined K/V must never be mapped into a later table."""
         s = self.slots[i]
         s.req.tokens = np.asarray(s.emitted, np.int32)
+        s.req.finished_time = time.perf_counter()
         if status is RequestStatus.FAILED and self.prefix_index is not None:
             self.prefix_index.drop_pages(s.pages)
         self.slots[i] = None
@@ -726,9 +767,76 @@ class ServingEngine:
                 f"failures (last: {self.last_chunk_error}); giving up: "
                 f"{self._state()}") from err
 
+    # -- adaptive chunk length (DESIGN.md §15) -------------------------------
+
+    def _chunk_signals(self, active: List[int]) -> ChunkSignals:
+        """Assemble the chunk policy's inputs from host mirrors only —
+        scheduler queue, per-slot emitted counts, request targets.
+        Nothing here touches the device, so consulting the policy adds
+        zero host syncs (the steady-state sync test still counts exactly
+        one declared transfer per chunk)."""
+        tick = self.tick
+        queue_depth = sum(
+            1 for r in self.scheduler.waiting if r.arrival <= tick)
+        slack = None
+        headroom = None
+        for i in active:
+            s = self.slots[i]
+            left = s.req.max_new - len(s.emitted)
+            slack = left if slack is None else min(slack, left)
+            dl = s.req.deadline
+            if dl is not None:
+                h = max(1, dl - tick)
+                headroom = h if headroom is None else min(headroom, h)
+            tp = s.req.tpot_target_ticks
+            if tp is not None:
+                # the stream flushes only at boundaries: a chunk longer
+                # than the per-token target holds tokens past it
+                headroom = tp if headroom is None else min(headroom, tp)
+        next_arrival = None
+        for r in self.scheduler.waiting:
+            if r.arrival > tick:
+                d = r.arrival - tick
+                next_arrival = (d if next_arrival is None
+                                else min(next_arrival, d))
+                continue
+            if r.ttft_target_ticks is not None:
+                h = max(1, r.arrival + r.ttft_target_ticks - tick)
+                headroom = h if headroom is None else min(headroom, h)
+        return ChunkSignals(tick=tick, queue_depth=queue_depth,
+                            free_slots=self.num_slots - len(active),
+                            min_active_slack=slack, slo_headroom=headroom,
+                            next_arrival_in=next_arrival)
+
+    def _next_ticks(self, active: List[int]) -> int:
+        """The next chunk's length.  Fixed ``ticks_per_sync`` without a
+        policy (and in degraded mode, where recovery already forced the
+        single-tick replayable unit); otherwise the policy's pick for
+        the current signals — always a member of its declared
+        ``compile_levels``, so the jitted ``_decode_chunk`` variants
+        stay a small closed set."""
+        if self.chunk_policy is None or self.degraded:
+            return self.ticks_per_sync
+        return self.chunk_policy.next_ticks(self._chunk_signals(active))
+
+    def _count_chunk(self, ticks: int) -> None:
+        """Record a COMMITTED chunk length (aborted chunks are restored,
+        not counted) and the shrink/grow transition against the previous
+        committed chunk — the bench and the check.sh smoke assert the
+        adaptive policy actually exercised both directions."""
+        self.chunks_by_ticks[ticks] = self.chunks_by_ticks.get(ticks, 0) + 1
+        prev = self._last_chunk_ticks
+        if prev is not None:
+            if ticks < prev:
+                self.chunk_shrinks += 1
+            elif ticks > prev:
+                self.chunk_grows += 1
+        self._last_chunk_ticks = ticks
+
     def step(self) -> int:
         """One scheduler event: fault/lifecycle servicing, admission,
-        then ONE on-device chunk of ``ticks_per_sync`` decode steps.
+        then ONE on-device chunk of ``ticks_per_sync`` decode steps
+        (or the adaptive policy's pick, see ``_next_ticks``).
         Returns the number of requests admitted this event."""
         self._step_progress = False
         if self.injector is not None:
@@ -741,15 +849,15 @@ class ServingEngine:
         if not active:
             self.tick += 1
             return admitted
-        self._cow_guard(active)
+        ticks = self._next_ticks(active)
+        self._cow_guard(active, ticks)
         left = np.zeros((self.num_slots,), np.int32)
         for i in active:
             left[i] = self.slots[i].req.max_new - len(self.slots[i].emitted)
-        ticks = self.ticks_per_sync
         snap = self._snapshot()
         try:
             if self.injector is not None:
-                self.injector.on_chunk_start(self, active)
+                self.injector.on_chunk_start(self, active, ticks)
             toks, counts, bad, tok, clen, rngs, caches = _decode_chunk(
                 self.params, self.caches, jnp.asarray(self._tok),
                 jnp.asarray(self._cache_len), jnp.asarray(self._tables),
@@ -788,6 +896,7 @@ class ServingEngine:
         self.active_slot_ticks += int(counts.sum())
         self.decode_ticks += ticks
         self.tick += ticks
+        self._count_chunk(ticks)
         return admitted
 
     @property
@@ -830,6 +939,56 @@ class ServingEngine:
             "degraded": int(self.degraded),
         }
 
+    def slo_stats(self) -> Dict[str, object]:
+        """SLO / adaptive-chunking observability (DESIGN.md §15),
+        exposed like :attr:`prefix_stats` / :attr:`fault_stats`.
+
+        Chunk side: whether a policy is attached, the declared compile
+        set of chunk lengths, a histogram of committed chunk lengths,
+        and shrink/grow transition counts.  Request side: soft-target
+        miss counters plus per-priority-class latency aggregates over
+        every terminal request that held a slot — TTFT p50/p99 in ticks
+        (admission tick minus arrival; the first token lands at
+        admission) and mean ticks-per-token after the first.  Computed
+        lazily by scanning ``scheduler.finished`` — nothing here is on
+        the hot path."""
+        policy = self.chunk_policy
+        ttft_miss = tpot_miss = 0
+        by_prio: Dict[int, Dict[str, List[float]]] = {}
+        for r in self.scheduler.finished:
+            ttft_miss += int(r.ttft_missed)
+            tpot_miss += int(r.tpot_missed)
+            if r.admitted_at is None:
+                continue
+            cls = by_prio.setdefault(r.priority, {"ttft": [], "tpot": []})
+            cls["ttft"].append(float(r.ttft_ticks))
+            tpot = r.tpot_ticks
+            if tpot is not None:
+                cls["tpot"].append(float(tpot))
+        classes = {}
+        for prio in sorted(by_prio):
+            cls = by_prio[prio]
+            pct = percentiles(cls["ttft"])
+            classes[prio] = {
+                "requests": len(cls["ttft"]),
+                "ttft_ticks_p50": pct["p50"],
+                "ttft_ticks_p99": pct["p99"],
+                "tpot_ticks_mean": (float(np.mean(cls["tpot"]))
+                                    if cls["tpot"] else 0.0),
+            }
+        return {
+            "adaptive": int(policy is not None),
+            "chunk_levels": list(policy.compile_levels) if policy is not None
+            else [self.configured_ticks_per_sync],
+            "chunks_by_ticks": dict(sorted(self.chunks_by_ticks.items())),
+            "chunk_shrinks": self.chunk_shrinks,
+            "chunk_grows": self.chunk_grows,
+            "aging_ticks": self.scheduler.aging_ticks or 0,
+            "ttft_target_misses": ttft_miss,
+            "tpot_target_misses": tpot_miss,
+            "by_priority": classes,
+        }
+
     def analysis_stats(self) -> Dict[str, object]:
         """Runtime counters backing the static analyzer's dynamic claims
         (DESIGN.md §14), exposed like :attr:`prefix_stats` /
@@ -860,12 +1019,12 @@ class ServingEngine:
     def _state(self) -> str:
         """One-line engine state for stall diagnostics."""
         waiting = [(r.rid, r.budget_tokens,
-                    self.scheduler.pages_needed(r), r.arrival)
+                    self.scheduler.pages_needed(r), r.arrival, r.priority)
                    for r in self.scheduler.waiting]
         active = [(s.req.rid, len(s.emitted), s.req.max_new)
                   for s in self.slots if s is not None]
         return (f"tick={self.tick} "
-                f"waiting(rid,budget_tok,pages,arrival)={waiting} "
+                f"waiting(rid,budget_tok,pages,arrival,prio)={waiting} "
                 f"active(rid,emitted,max_new)={active} "
                 f"pool={self.pool.free_pages}/{self.pool.num_pages - 1} "
                 f"pages free (page_size={self.pool.page_size}, "
@@ -889,11 +1048,13 @@ class ServingEngine:
             # (cancel/expire/reject), a transient allocator failure being
             # retried, or a recovered chunk fault
             idle = all(s is None for s in self.slots)
-            due = (self.scheduler.pending
-                   and self.scheduler.waiting[0].arrival <= self.tick)
+            # priority order means the queue head may not be the earliest
+            # arrival — "due" is ANY arrived waiter
+            due = any(r.arrival <= self.tick
+                      for r in self.scheduler.waiting)
             admitted = self.step()
             if idle and due and not admitted and not self._step_progress:
-                head = self.scheduler.waiting[0]
+                head = self.scheduler.effective_head(self.tick)
                 avail = self.pool.free_pages
                 if self.prefix_index is not None:
                     avail += self.prefix_index.evictable_pages()

@@ -138,13 +138,24 @@ class FaultInjector:
                 f"injected allocator failure at tick {engine.tick} "
                 f"({need} pages requested)")
 
-    def on_chunk_start(self, engine, active: Sequence[int]) -> None:
-        """Called after the COW guard, right before the decode chunk."""
+    def on_chunk_start(self, engine, active: Sequence[int],
+                       ticks: Optional[int] = None) -> None:
+        """Called after the COW guard, right before the decode chunk.
+        ``ticks`` is the length the engine committed to for THIS chunk —
+        under an adaptive policy (DESIGN.md §15) that varies per
+        boundary, and logging it lets chaos × SLO tests assert a fault
+        fired inside a specific chunk length (e.g. a shrunk one).  A
+        chunk_exception here aborts the whole chunk before any tick of
+        it runs: the engine restores its snapshot and degrades to
+        single-tick chunks, which overrides the adaptive policy until
+        the engine is rebuilt (degraded wins — every retry must be the
+        smallest replayable unit)."""
         for f in self._due(engine, "nan_logit"):
             if not self._poison(engine, active, f.rid):
                 self._pending.append(f)      # target not active yet: defer
         for f in self._due(engine, "chunk_exception"):
-            self.fired.append(("chunk_exception", engine.tick, None))
+            self.fired.append(("chunk_exception", engine.tick,
+                               {"ticks": ticks}))
             raise InjectedFault(
                 f"injected decode-chunk crash at tick {engine.tick}")
 

@@ -247,6 +247,48 @@ def test_recompile_stable_static_calls_stay_silent(tmp_path):
     assert findings == []
 
 
+def test_recompile_naive_adaptive_driver_antipattern(tmp_path):
+    """The DESIGN.md §15 hazard the AdaptiveChunkPolicy exists to avoid:
+    a serving loop that feeds an unbounded load signal straight into the
+    static chunk-length argument compiles one XLA variant per distinct
+    load level — the rule must flag the loop-varying static."""
+    findings, _ = _scan(tmp_path, """
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("ticks",))
+        def decode_chunk(tok, ticks):
+            return tok * ticks
+
+        def serve(engine, tok):
+            while engine.pending:
+                ticks = engine.queue_depth        # unbounded load signal
+                tok = decode_chunk(tok, ticks=ticks)
+            return tok
+        """, enabled="recompile-hazard")
+    assert len(findings) == 1
+    assert "reassigned inside the enclosing loop" in findings[0].message
+
+
+def test_recompile_sweep_clean_over_adaptive_serving_path():
+    """The real adaptive code path (serving/slo.py + the engine's
+    _next_ticks -> step wiring) must carry zero NEW recompile-hazard
+    findings: the policy's frozen level ladder, not a loop-varying
+    static, feeds the ``ticks`` static of ``_decode_chunk``.  (The one
+    baselined finding — the justified per-prefix-bucket ``start`` static
+    of ``_paged_prefill_step`` — is allowed to survive, nothing else.)"""
+    serving = REPO_ROOT / "src" / "repro" / "serving"
+    index = lint.build_index(REPO_ROOT, [serving])
+    findings, _ = lint.run_rules(index, all_rules(),
+                                 enabled={"recompile-hazard"})
+    stray = [f.format() for f in findings
+             if not ("_paged_prefill_step" in f.message
+                     and "`start`" in f.message)]
+    assert stray == []
+    # and nothing — baselined or not — implicates the adaptive path
+    assert not [f for f in findings
+                if "slo" in f.path or "`ticks`" in f.message]
+
+
 # ---------------------------------------------------------------------------
 # pallas-constraints
 # ---------------------------------------------------------------------------

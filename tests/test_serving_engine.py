@@ -151,6 +151,26 @@ def test_scheduler_insort_matches_stable_sort_semantics():
             [r.rid for r in reference], f"trial {trial}"
 
 
+def test_scheduler_priority_key_insort_matches_stable_sort():
+    """The DESIGN.md §15 queue key: random (priority, arrival) traffic
+    must leave the queue stably sorted by (priority, arrival) — equal
+    keys in submit order — exactly what a full re-sort would produce."""
+    rng = np.random.default_rng(15)
+    for trial in range(20):
+        pool = PagePool(num_pages=64, page_size=4)
+        sched = Scheduler(pool)
+        reqs = []
+        for rid in range(int(rng.integers(1, 40))):
+            r = Request(rid=rid, prompt=np.zeros(2, np.int32), max_new=2,
+                        arrival=int(rng.integers(0, 4)),
+                        priority=int(rng.integers(0, 3)))
+            reqs.append(r)
+            sched.submit(r)
+        reference = sorted(reqs, key=lambda r: (r.priority, r.arrival))
+        assert [r.rid for r in sched.waiting] == \
+            [r.rid for r in reference], f"trial {trial}"
+
+
 # ---------------------------------------------------------------------------
 # Paged attention_decode == contiguous attention_decode
 # ---------------------------------------------------------------------------
@@ -360,6 +380,29 @@ def test_engine_eos_retires_slot_and_readmits():
     np.testing.assert_array_equal(done[1].tokens,
                                   _solo(cfg, dense, p1, 3, eos_id=eos))
     assert done[1].admitted_at >= done[0].finished_at
+
+
+def test_engine_priority_reorders_admission_not_tokens():
+    """Priority classes (DESIGN.md §15) through the full engine: a
+    same-tick submission burst admits urgent-first, eviction freedom
+    holds per admission (every admitted stream runs to its last token),
+    and every stream stays bit-identical to its solo decode."""
+    cfg, dense, _ = _smoke_pair()
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+               for _ in range(3)]
+    eng = ServingEngine(dense, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, ticks_per_sync=2)
+    rids = [eng.submit(p, 3, priority=pr)
+            for p, pr in zip(prompts, (2, 0, 1))]
+    done = eng.run()
+    order = sorted(rids, key=lambda r: done[r].admitted_at)
+    assert order == [1, 2, 0]          # urgency order, not submit order
+    for r, p in zip(rids, prompts):
+        assert done[r].status.name == "FINISHED"
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, dense, p, 3),
+                                      err_msg=f"request {r}")
 
 
 # ---------------------------------------------------------------------------

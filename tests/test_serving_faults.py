@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.serving import (
+    AdaptiveChunkPolicy,
     FaultInjector,
     InjectedFault,
     Request,
@@ -325,6 +326,88 @@ def test_alloc_failure_unwinds_and_retries(smoke):
 
 
 # ---------------------------------------------------------------------------
+# Chaos x SLO interplay (DESIGN.md §15): faults mid-adaptive-chunk
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_faults_fire_mid_adaptive_chunk(smoke):
+    """Deadline expiry, cancellation and REJECTED backpressure all fire
+    correctly while the adaptive policy is varying chunk lengths: the
+    terminal statuses land, the survivors stay bit-identical to solo,
+    the pool conserves, and every committed chunk length came from the
+    policy's declared compile set."""
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(31)
+    prompts = _prompts(rng, cfg, [5, 7, 6, 5, 5])
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=16,
+                        chunk_policy=AdaptiveChunkPolicy(), max_queue=4)
+    r0 = eng.submit(prompts[0], 8)                       # survivor
+    r1 = eng.submit(prompts[1], 8, deadline_ticks=4)     # expires mid-stream
+    r2 = eng.submit(prompts[2], 6, arrival=2)            # cancelled queued
+    r3 = eng.submit(prompts[3], 6, arrival=3)            # survivor, late
+    r4 = eng.submit(prompts[4], 4)                       # over max_queue
+    assert eng.requests[r4].status is RequestStatus.REJECTED
+    assert eng.cancel(r2) is RequestStatus.CANCELLED
+    done = eng.run()
+    assert done[r1].status is RequestStatus.EXPIRED
+    assert len(done[r1].tokens) < 8                      # cut mid-stream
+    np.testing.assert_array_equal(                       # partials correct
+        done[r1].tokens,
+        _solo(cfg, params, prompts[1], 8)[:len(done[r1].tokens)])
+    for r, g in ((r0, 8), (r3, 6)):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(
+            done[r].tokens,
+            _solo(cfg, params, eng.requests[r].prompt, g))
+    stats = eng.fault_stats
+    assert stats["rejected"] == 1 and stats["cancelled"] == 1
+    assert stats["expired"] == 1
+    slo = eng.slo_stats()
+    assert set(slo["chunks_by_ticks"]) <= \
+        set(eng.chunk_policy.compile_levels)
+    # the policy really varied the chunk length around the fault events
+    # (this trace caps at the scheduled arrival, then grows back calm)
+    assert len(slo["chunks_by_ticks"]) >= 2
+    assert slo["chunk_shrinks"] + slo["chunk_grows"] >= 1
+    _pool_conserved(eng)
+
+
+def test_chunk_crash_degrades_adaptive_without_deadlock(smoke):
+    """A chunk exception under the adaptive policy: the degraded
+    single-tick fallback OVERRIDES the policy (recovery owns the chunk
+    length), the engine still drains — no deadlock between the two chunk
+    deciders — every stream completes bit-identically, and slo_stats
+    stays consistent (only declared levels in the histogram, tail all
+    1-tick chunks)."""
+    cfg, params, _ = smoke
+    rng = np.random.default_rng(32)
+    prompts = _prompts(rng, cfg, [5, 9])
+    inj = FaultInjector([chunk_exception(2)], seed=0)
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=16,
+                        chunk_policy=AdaptiveChunkPolicy(),
+                        fault_injector=inj)
+    # the scheduled arrival at tick 4 caps the first chunk (a calm
+    # 16-tick chunk would finish everything before the crash could fire
+    # at a boundary); the second chunk's start then trips the fault
+    rids = [eng.submit(p, 6, arrival=4 * i) for i, p in enumerate(prompts)]
+    done = eng.run()
+    for r, p in zip(rids, prompts):
+        assert done[r].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(done[r].tokens,
+                                      _solo(cfg, params, p, 6))
+    assert eng.fault_stats["chunk_failures"] == 1
+    assert eng.fault_stats["degraded"] == 1
+    assert eng.ticks_per_sync == 1                   # recovery's pick...
+    slo = eng.slo_stats()
+    assert slo["adaptive"] == 1
+    assert set(slo["chunks_by_ticks"]) <= \
+        set(eng.chunk_policy.compile_levels)
+    assert slo["chunks_by_ticks"].get(1, 0) >= 1     # ...actually decoded
+    _pool_conserved(eng)
+
+
+# ---------------------------------------------------------------------------
 # Satellite: property-based chaos traces — conservation under any mix
 # ---------------------------------------------------------------------------
 
@@ -333,7 +416,10 @@ def test_property_chaos_traces_conserve_pages(smoke):
     engine step the page pool must balance exactly against the active
     tables plus the index ledger (never a leaked or double-freed page),
     every request must end in exactly one terminal status, and draining
-    the cache must return the pool to fully free."""
+    the cache must return the pool to fully free.  Half the traces run
+    the adaptive chunk policy (with mixed priorities and soft SLO
+    targets), so conservation is proven under varying chunk lengths
+    too."""
     cfg, params, _ = smoke
     for seed in range(6):
         rng = np.random.default_rng(100 + seed)
@@ -345,10 +431,12 @@ def test_property_chaos_traces_conserve_pages(smoke):
                            "chunk": chunk_exception(int(t)),
                            "corrupt": index_corruption(int(t))}[kind])
         inj = FaultInjector(faults, seed=seed)
+        policy = AdaptiveChunkPolicy((1, 2, 4)) if seed % 2 else None
         eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
                             max_seq_len=16,
                             ticks_per_sync=int(rng.choice([1, 2])),
-                            max_queue=4, fault_injector=inj)
+                            max_queue=4, fault_injector=inj,
+                            chunk_policy=policy)
         rids = []
         for _ in range(int(rng.integers(3, 7))):
             prompt = rng.integers(0, cfg.vocab,
@@ -358,7 +446,11 @@ def test_property_chaos_traces_conserve_pages(smoke):
             rids.append(eng.submit(prompt.astype(np.int32),
                                    int(rng.integers(2, 7)),
                                    arrival=int(rng.integers(0, 8)),
-                                   deadline_ticks=dl))
+                                   deadline_ticks=dl,
+                                   priority=int(rng.integers(0, 3)),
+                                   ttft_target_ticks=(int(rng.integers(2, 10))
+                                                      if rng.integers(2)
+                                                      else None)))
         steps = 0
         while (eng.scheduler.pending
                or any(s is not None for s in eng.slots)
@@ -376,6 +468,8 @@ def test_property_chaos_traces_conserve_pages(smoke):
         eng.release_prefix_cache()
         assert eng.pool.free_pages == eng.pool.num_pages - 1, seed
         assert eng.pool.live_refs() == 0
+        if policy is not None:       # adaptive traces kept the contract
+            assert set(eng.chunks_by_ticks) <= set(policy.compile_levels)
 
 
 # ---------------------------------------------------------------------------

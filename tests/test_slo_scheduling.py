@@ -1,0 +1,502 @@
+"""SLO-aware adaptive scheduling (DESIGN.md §15).
+
+Two load-bearing properties:
+
+* **Policy invariance** — the adaptive chunk policy (and any fixed
+  ``ticks_per_sync``, and any priority assignment) moves only *when*
+  chunk boundaries land, never *what* tokens a request emits: every
+  stream stays bit-identical to its solo decode across all of them,
+  dense AND packed.
+* **The recompile contract** — the policy only ever requests chunk
+  lengths from its frozen, declared ``compile_levels`` set, so adaptive
+  traffic compiles at most ``len(compile_levels)`` ``_decode_chunk``
+  variants and zero thereafter (a naive ``ticks = f(load)`` driver is a
+  compile storm — see the recompile-hazard golden in test_analysis.py).
+
+Plus the scheduler-side anti-starvation argument: aging promotes any
+waiter one effective priority level per ``aging_ticks``, so sustained
+higher-priority load bounds — not unbounds — a low-priority wait.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.serving import (
+    DEFAULT_LEVELS,
+    AdaptiveChunkPolicy,
+    ChunkSignals,
+    PagePool,
+    Request,
+    RequestStatus,
+    Scheduler,
+    ServingEngine,
+)
+from repro.serving.slo import percentiles
+from test_serving_engine import _smoke_pair, _solo
+
+_SMOKE = None
+
+
+def _smoke():
+    """Module-cached smoke pair (plain function, not a pytest fixture,
+    so the _hyp property wrappers — which take no parameters — can use
+    it too)."""
+    global _SMOKE
+    if _SMOKE is None:
+        _SMOKE = _smoke_pair()
+    return _SMOKE
+
+
+def _req(rid, *, arrival=0, priority=0, plen=4, max_new=2, **kw):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                   max_new=max_new, arrival=arrival, priority=priority, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveChunkPolicy units
+# ---------------------------------------------------------------------------
+
+def test_policy_validates_levels_and_hot_queue():
+    with pytest.raises(ValueError, match="levels"):
+        AdaptiveChunkPolicy(levels=())
+    with pytest.raises(ValueError, match="levels"):
+        AdaptiveChunkPolicy(levels=(0, 4))
+    with pytest.raises(ValueError, match="hot_queue"):
+        AdaptiveChunkPolicy(hot_queue=0)
+    # levels are deduped + sorted; compile_levels adds the degraded 1
+    p = AdaptiveChunkPolicy(levels=(8, 4, 8, 16))
+    assert p.levels == (4, 8, 16)
+    assert p.compile_levels == (1, 4, 8, 16)
+    assert AdaptiveChunkPolicy().compile_levels == DEFAULT_LEVELS
+
+
+def test_policy_calm_runs_top_level():
+    p = AdaptiveChunkPolicy()
+    sig = ChunkSignals(tick=0, queue_depth=0, free_slots=2,
+                       min_active_slack=7)          # no waiter: slack idle
+    assert p.cap(sig) is None
+    assert p.next_ticks(sig) == DEFAULT_LEVELS[-1]
+
+
+def test_policy_rounds_down_never_overshoots_the_cap():
+    """For every cap the pick is the largest level <= cap (the boundary
+    lands at or before the slot-free event / SLO edge), bottoming out at
+    the smallest level."""
+    p = AdaptiveChunkPolicy()
+    for slack in range(1, 40):
+        sig = ChunkSignals(tick=0, queue_depth=1, min_active_slack=slack)
+        t = p.next_ticks(sig)
+        assert t in p.levels
+        assert t <= max(slack, p.levels[0])
+        # largest such level: the next one up would overshoot
+        bigger = [l for l in p.levels if t < l <= slack]
+        assert not bigger
+
+
+def test_policy_queue_must_be_hot_for_slack_cap():
+    p = AdaptiveChunkPolicy(hot_queue=2)
+    sig1 = ChunkSignals(tick=0, queue_depth=1, min_active_slack=3)
+    sig2 = ChunkSignals(tick=0, queue_depth=2, min_active_slack=3)
+    assert p.next_ticks(sig1) == p.levels[-1]       # 1 waiter: not hot yet
+    assert p.next_ticks(sig2) == 2                  # hot: round 3 down to 2
+
+
+def test_policy_arrival_cap_and_busy_slot_shift():
+    p = AdaptiveChunkPolicy()
+    # a slot is free: land the boundary exactly at the scheduled arrival
+    sig = ChunkSignals(tick=0, queue_depth=0, free_slots=1,
+                       next_arrival_in=6)
+    assert p.cap(sig) == 6 and p.next_ticks(sig) == 4
+    # no slot free: a boundary at the arrival is a wasted sync — the
+    # target shifts out to the slot-free event (the later of the two)
+    sig = ChunkSignals(tick=0, queue_depth=0, free_slots=0,
+                       min_active_slack=10, next_arrival_in=6)
+    assert p.cap(sig) == 10
+    sig = ChunkSignals(tick=0, queue_depth=0, free_slots=0,
+                       min_active_slack=3, next_arrival_in=6)
+    assert p.cap(sig) == 6                          # arrival is the later
+
+
+def test_policy_slo_headroom_caps_and_min_of_caps_wins():
+    p = AdaptiveChunkPolicy()
+    sig = ChunkSignals(tick=0, queue_depth=1, min_active_slack=12,
+                       slo_headroom=3, next_arrival_in=9)
+    assert p.cap(sig) == 3 and p.next_ticks(sig) == 2
+    # caps clamp at 1: a blown target shrinks to the smallest level,
+    # never to zero
+    sig = ChunkSignals(tick=5, queue_depth=1, min_active_slack=0,
+                       slo_headroom=-4)
+    assert p.cap(sig) == 1 and p.next_ticks(sig) == 1
+
+
+def test_percentiles_empty_safe():
+    assert percentiles([]) == {"p50": 0.0, "p99": 0.0}
+    out = percentiles([2.0, 4.0], qs=(50,))
+    assert out == {"p50": 3.0}
+
+
+# ---------------------------------------------------------------------------
+# Request soft-SLO accounting
+# ---------------------------------------------------------------------------
+
+def test_request_slo_accounting_properties():
+    r = _req(0, arrival=2, ttft_target_ticks=3, tpot_target_ticks=2)
+    assert r.ttft_ticks is None and not r.ttft_missed       # not terminal yet
+    r.admitted_at = 8
+    assert r.ttft_ticks == 6 and r.ttft_missed              # 6 > 3
+    r.finished_at = 18
+    r.tokens = np.zeros(3, np.int32)
+    assert r.tpot_ticks == pytest.approx(5.0) and r.tpot_missed
+    ok = _req(1, arrival=0, ttft_target_ticks=4, tpot_target_ticks=6)
+    ok.admitted_at, ok.finished_at = 4, 10
+    ok.tokens = np.zeros(4, np.int32)
+    assert not ok.ttft_missed and not ok.tpot_missed
+    # terminal without ever holding a slot: a set TTFT target counts missed
+    never = _req(2, ttft_target_ticks=4)
+    assert not never.ttft_missed                            # still queued
+    never.status = RequestStatus.EXPIRED
+    assert never.ttft_missed
+    # no targets: nothing ever counts as missed
+    plain = _req(3)
+    plain.status = RequestStatus.FINISHED
+    assert not plain.ttft_missed and not plain.tpot_missed
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: priority classes + aging
+# ---------------------------------------------------------------------------
+
+def test_scheduler_priority_orders_admission_fifo_within_class():
+    pool = PagePool(num_pages=64, page_size=4)
+    sch = Scheduler(pool)
+    sch.submit(_req(0, priority=2))
+    sch.submit(_req(1, priority=0))
+    sch.submit(_req(2, priority=1))
+    sch.submit(_req(3, priority=0))                 # same class as rid 1
+    assert [r.rid for r in sch.waiting] == [1, 3, 2, 0]
+    got = sch.admit(tick=0, free_slots=4)
+    assert [r.rid for r in got] == [1, 3, 2, 0]     # class, then submit order
+
+
+def test_scheduler_default_priorities_reduce_to_arrival_fifo():
+    """All-priority-0 traffic under the aging scheduler admits in exactly
+    the PR-8 arrival-FIFO order, tick by tick."""
+    rng = np.random.default_rng(11)
+    pool = PagePool(num_pages=64, page_size=4)
+    sch = Scheduler(pool, aging_ticks=8)
+    reqs = [_req(rid, arrival=int(rng.integers(0, 6))) for rid in range(12)]
+    for r in reqs:
+        sch.submit(r)
+    order = []
+    for tick in range(8):
+        order += [r.rid for r in sch.admit(tick, free_slots=2)]
+    ref = [r.rid for r in sorted(reqs, key=lambda r: r.arrival)]
+    assert order == ref
+
+
+def test_scheduler_aging_bounds_low_priority_wait():
+    """A priority-p waiter undercuts an endless stream of fresh
+    priority-0 arrivals within (p+1)*aging_ticks — the starvation-freedom
+    bound.  With aging disabled the same trace starves it."""
+    for aging, expect_admitted in ((4, True), (None, False)):
+        pool = PagePool(num_pages=256, page_size=4)
+        sch = Scheduler(pool, aging_ticks=aging)
+        victim = _req(0, priority=3)
+        sch.submit(victim)
+        admitted_at = None
+        rid = 1
+        for tick in range(40):                       # 2x the aging bound
+            sch.submit(_req(rid, arrival=tick))      # sustained prio-0 load
+            rid += 1
+            for r in sch.admit(tick, free_slots=1):  # slot frees every tick
+                if r.rid == 0:
+                    admitted_at = tick
+        if expect_admitted:
+            assert admitted_at is not None
+            assert admitted_at <= (victim.priority + 1) * aging
+        else:
+            assert admitted_at is None               # starved: aging off
+
+
+def test_scheduler_effective_priority_math_and_head():
+    pool = PagePool(num_pages=64, page_size=4)
+    sch = Scheduler(pool, aging_ticks=5)
+    old = _req(0, priority=2, arrival=0)
+    fresh = _req(1, priority=0, arrival=14)
+    sch.submit(old), sch.submit(fresh)
+    assert sch.effective_priority(old, tick=4) == 2        # < one period
+    assert sch.effective_priority(old, tick=5) == 1
+    assert sch.effective_priority(old, tick=14) == 0       # ties with fresh
+    # tie at equal effective priority: static queue position wins (fresh
+    # prio-0 sorts ahead of a prio-2), so the victim needs to UNDERCUT
+    assert sch.effective_head(14).rid == 1
+    assert sch.effective_head(15).rid == 0                 # now -1 < 0
+    # unarrived requests are invisible to the effective head
+    assert sch.effective_head(13).rid == 0
+    with pytest.raises(ValueError, match="aging_ticks"):
+        Scheduler(pool, aging_ticks=0)
+
+
+def test_scheduler_effective_head_of_line_blocks_lower_classes():
+    """When the most-urgent arrived waiter does not fit the pool, nothing
+    behind it is admitted either — skipping ahead would starve it."""
+    pool = PagePool(num_pages=5, page_size=4)              # 4 usable pages
+    sch = Scheduler(pool)
+    sch.submit(_req(0, priority=0, plen=10, max_new=6))    # 4 pages
+    sch.submit(_req(1, priority=1, plen=2, max_new=2))     # 1 page
+    pool.alloc(8)                                          # 2 pages taken
+    assert sch.admit(tick=0, free_slots=2) == []           # head blocks all
+
+
+def test_scheduler_same_tick_mixed_priority_reservation():
+    """Same-tick admissions reserve pages against each other in
+    effective-priority order: the reservation-conservation invariant
+    survives the priority reordering."""
+    pool = PagePool(num_pages=5, page_size=4)              # 4 usable pages
+    sch = Scheduler(pool)
+    sch.submit(_req(0, priority=2, plen=8, max_new=4))     # 3 pages
+    sch.submit(_req(1, priority=0, plen=8, max_new=4))     # 3 pages
+    sch.submit(_req(2, priority=1, plen=8, max_new=4))     # 3 pages
+    got = sch.admit(tick=0, free_slots=3)
+    assert [r.rid for r in got] == [1]                     # 3 + 3 > 4 blocks
+    assert sum(pool.pages_for(r.budget_tokens) for r in got) \
+        <= pool.free_pages
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_priority_admission_conserves_reservations(seed):
+    """The PR-8 reservation fuzz re-proven under priority-ordered
+    admission with aging: random submit/admit/retire traffic with random
+    priority classes never over-reserves the pool, and retirement
+    returns exactly the reserved pages (eviction-freedom intact)."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=9, page_size=4)
+    aging = [None, 2, 8][int(rng.integers(3))]
+    sch = Scheduler(pool, aging_ticks=aging)
+    live, rid = [], 0
+    for tick in range(30):
+        for _ in range(int(rng.integers(0, 3))):
+            sch.submit(Request(
+                rid=rid, prompt=np.zeros(int(rng.integers(1, 12)), np.int32),
+                max_new=int(rng.integers(1, 8)), arrival=tick,
+                priority=int(rng.integers(0, 4))))
+            rid += 1
+        got = sch.admit(tick, free_slots=4 - len(live))
+        assert len(got) <= 4 - len(live)
+        assert sum(pool.pages_for(r.budget_tokens) for r in got) \
+            <= pool.free_pages
+        for r in got:
+            pages = pool.alloc(r.budget_tokens)            # cannot raise
+            live.append((r, pages))
+        keep = []
+        for r, pages in live:
+            if rng.integers(2):
+                before = pool.free_pages
+                sch.retire(r, pages, tick)
+                assert pool.free_pages == before + len(pages)
+            else:
+                keep.append((r, pages))
+        live = keep
+    for r, pages in live:
+        sch.retire(r, pages, tick)
+    assert pool.free_pages == pool.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Engine: submit validation + SLO plumbing
+# ---------------------------------------------------------------------------
+
+def test_engine_validates_slo_submit_args_and_aging():
+    cfg, params, _ = _smoke()
+    with pytest.raises(ValueError, match="aging_ticks"):
+        ServingEngine(params, cfg, num_slots=1, page_size=4,
+                      max_seq_len=16, aging_ticks=0)
+    eng = ServingEngine(params, cfg, num_slots=1, page_size=4,
+                        max_seq_len=16, aging_ticks=7)
+    assert eng.scheduler.aging_ticks == 7                  # threaded through
+    p = np.zeros(4, np.int32)
+    with pytest.raises(ValueError, match="ttft_target_ticks"):
+        eng.submit(p, 2, ttft_target_ticks=0)
+    with pytest.raises(ValueError, match="tpot_target_ticks"):
+        eng.submit(p, 2, tpot_target_ticks=0)
+    rid = eng.submit(p, 2, priority=3, ttft_target_ticks=5,
+                     tpot_target_ticks=4)
+    req = eng.requests[rid]
+    assert (req.priority, req.ttft_target_ticks, req.tpot_target_ticks) \
+        == (3, 5, 4)
+
+
+def test_adaptive_boundary_lands_at_slot_free_event():
+    """The deterministic core of the tentpole: one busy slot, one arrived
+    waiter.  Fixed tps=16 strands the waiter until tick 16; the adaptive
+    ladder walks 4 -> 1 and lands the boundary exactly at tick 5, where
+    the first stream's budget frees the slot (its first token came from
+    the admission prefill, leaving 5 decode ticks) — and neither
+    stream's tokens move."""
+    cfg, params, _ = _smoke()
+    rng = np.random.default_rng(3)
+    p0 = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab, size=7).astype(np.int32)
+
+    def run(policy):
+        eng = ServingEngine(params, cfg, num_slots=1, page_size=4,
+                            max_seq_len=16, ticks_per_sync=16,
+                            chunk_policy=policy)
+        eng.submit(p0, 6)
+        eng.submit(p1, 3)
+        return eng, eng.run()
+
+    fixed_eng, fixed = run(None)
+    adapt_eng, adapt = run(AdaptiveChunkPolicy())
+    assert fixed[1].admitted_at == 16                      # chunk-grid TTFT
+    assert adapt[1].admitted_at == 5                       # exact slot-free
+    assert adapt_eng.chunk_shrinks >= 1
+    assert set(adapt_eng.chunks_by_ticks) <= \
+        set(adapt_eng.chunk_policy.compile_levels)
+    for rid, (p, g) in enumerate(((p0, 6), (p1, 3))):
+        np.testing.assert_array_equal(adapt[rid].tokens,
+                                      _solo(cfg, params, p, g))
+        np.testing.assert_array_equal(fixed[rid].tokens, adapt[rid].tokens)
+    stats = adapt_eng.slo_stats()
+    assert stats["adaptive"] == 1 and stats["chunk_shrinks"] >= 1
+
+
+def test_slo_stats_shape_and_per_priority_classes():
+    cfg, params, _ = _smoke()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+               for _ in range(4)]
+    eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                        max_seq_len=16, ticks_per_sync=8,
+                        chunk_policy=AdaptiveChunkPolicy())
+    for i, p in enumerate(prompts):
+        eng.submit(p, 4, arrival=2 * i, priority=i % 2,
+                   ttft_target_ticks=4 if i % 2 == 0 else None)
+    done = eng.run()
+    stats = eng.slo_stats()
+    assert stats["adaptive"] == 1
+    assert stats["chunk_levels"] == list(DEFAULT_LEVELS)
+    assert set(stats["chunks_by_ticks"]) <= set(DEFAULT_LEVELS)
+    assert sum(stats["chunks_by_ticks"].values()) >= 1
+    assert set(stats["by_priority"]) == {0, 1}
+    for cls in stats["by_priority"].values():
+        assert cls["requests"] == 2
+        assert cls["ttft_ticks_p50"] <= cls["ttft_ticks_p99"]
+        assert cls["tpot_ticks_mean"] >= 0.0
+    # miss counters recompute from the terminal requests exactly
+    assert stats["ttft_target_misses"] == \
+        sum(int(r.ttft_missed) for r in done.values())
+    assert stats["tpot_target_misses"] == \
+        sum(int(r.tpot_missed) for r in done.values())
+    # a fixed engine reports its single configured level
+    fixed = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                          max_seq_len=16, ticks_per_sync=4)
+    s = fixed.slo_stats()
+    assert s["adaptive"] == 0 and s["chunk_levels"] == [4]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole property: policy invariance — streams never move
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_streams_bitmatch_across_policies(seed):
+    """Seeded random arrival traces: every request's token stream is
+    bit-identical across fixed ticks_per_sync 1/4/16 and the adaptive
+    policy, and across priority reorderings — for dense and packed
+    params (sampled per trace).  One randomly chosen stream per trace is
+    additionally pinned to its solo decode, anchoring the whole
+    equivalence class to the ground truth."""
+    cfg, dense, packed = _smoke()
+    rng = np.random.default_rng(seed)
+    params = (dense, packed)[int(rng.integers(2))]
+    n = int(rng.integers(3, 5))
+    lens = [int(rng.choice([5, 7])) for _ in range(n)]     # 2 prefill buckets
+    gens = [int(rng.integers(2, 6)) for _ in range(n)]
+    arrivals = sorted(int(a) for a in rng.integers(0, 10, size=n))
+    prios = [int(rng.integers(0, 3)) for _ in range(n)]
+    ttfts = [int(rng.integers(4, 20)) if rng.integers(2) else None
+             for _ in range(n)]
+    prompts = [rng.integers(0, cfg.vocab, size=l).astype(np.int32)
+               for l in lens]
+
+    def serve(policy_kw, order):
+        eng = ServingEngine(params, cfg, num_slots=2, page_size=4,
+                            max_seq_len=16, **policy_kw)
+        for i in range(n):
+            eng.submit(prompts[i], gens[i], arrival=arrivals[i],
+                       priority=order[i], ttft_target_ticks=ttfts[i])
+        done = eng.run()
+        assert all(r.status is RequestStatus.FINISHED for r in done.values())
+        return {r: tuple(int(t) for t in done[r].tokens) for r in done}, eng
+
+    base, _ = serve(dict(ticks_per_sync=1), prios)
+    for tps in (4, 16):
+        got, _ = serve(dict(ticks_per_sync=tps), prios)
+        assert got == base, f"fixed tps={tps} moved a stream"
+    adapt, eng = serve(dict(ticks_per_sync=16,
+                            chunk_policy=AdaptiveChunkPolicy()), prios)
+    assert adapt == base, "adaptive policy moved a stream"
+    assert set(eng.chunks_by_ticks) <= set(eng.chunk_policy.compile_levels)
+    flipped, _ = serve(dict(ticks_per_sync=16,
+                            chunk_policy=AdaptiveChunkPolicy()),
+                       [2 - p for p in prios])
+    assert flipped == base, "priority reordering moved a stream"
+    # anchor one stream to the ground truth solo decode
+    pick = int(rng.integers(n))
+    np.testing.assert_array_equal(
+        np.asarray(base[pick], np.int32),
+        _solo(cfg, params, prompts[pick], gens[pick]))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the recompile contract, proven with CompileTracker counters
+# ---------------------------------------------------------------------------
+
+def test_adaptive_policy_compiles_only_declared_levels():
+    """Adaptive bursty traffic compiles at most len(compile_levels)
+    _decode_chunk variants on first contact, and an identical second
+    engine run compiles NOTHING (jit-cache hit for every chunk length the
+    policy picks) — the CompileTracker-backed recompile regression."""
+    from repro.analysis import runtime as analysis_runtime
+
+    cfg, params, _ = _smoke()
+    rng = np.random.default_rng(9)
+    policy = AdaptiveChunkPolicy(levels=(1, 2, 4, 8))
+    PLEN, GEN = 6, 4
+
+    def build():
+        return ServingEngine(params, cfg, num_slots=2, page_size=4,
+                             max_seq_len=16, ticks_per_sync=8,
+                             chunk_policy=policy, prefix_caching=False)
+
+    def traffic(eng):
+        for i in range(6):
+            eng.submit(rng.integers(0, cfg.vocab,
+                                    size=PLEN).astype(np.int32),
+                       GEN, arrival=3 * i, priority=i % 2)
+
+    warm = build()
+    before = warm.analysis_stats()["compile_caches"]["_decode_chunk"]
+    traffic(warm)
+    assert len(warm.run()) == 6
+    after = warm.analysis_stats()["compile_caches"]["_decode_chunk"]
+    grew = after - before
+    assert grew <= len(policy.compile_levels), \
+        f"adaptive traffic compiled {grew} chunk variants, " \
+        f"declared only {policy.compile_levels}"
+    assert warm.chunk_shrinks >= 1                  # the trace really adapted
+    assert set(warm.chunks_by_ticks) <= set(policy.compile_levels)
+
+    eng = build()
+    traffic(eng)
+    snap = eng.analysis_stats()
+    assert len(eng.run()) == 6
+    out = eng.analysis_stats()
+    assert out["compile_caches"] == snap["compile_caches"], \
+        "second adaptive run recompiled a chunk variant"
+    assert out["compile_events"] == snap["compile_events"], \
+        "something compiled during the second adaptive run"
+    assert eng.chunks_by_ticks == warm.chunks_by_ticks  # deterministic policy
